@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: cached family loading, CSV emit, timers."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+RESULTS = ROOT / "results"
+RESULTS.mkdir(exist_ok=True)
+
+TRAIN_STEPS = 1500  # family training length (checkpoint cached)
+
+
+def get_families(verbose=True):
+    from repro.diffusion.train import get_or_train_families
+
+    return get_or_train_families(
+        ckpt_dir=str(RESULTS / "ckpts"), steps=TRAIN_STEPS, verbose=verbose
+    )
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV row contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    path = RESULTS / f"{name}.json"
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,82 @@
+"""Fig. 5 reproduction: quality metrics vs relay step s for all ten relay
+configurations plus the standalone baselines (XL-L, F3-L full; F3-M
+standalone)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, get_families, save_json
+from repro.core import accel_baselines as ab
+from repro.core.relay import make_relay_plan, relay_generate
+from repro.diffusion import synth
+from repro.serving import metrics as qm
+
+STEPS = (5, 10, 15, 20, 25)
+
+
+def _quality(xs, prompts):
+    mets = [qm.quality_metrics(np.asarray(xs)[i], prompts[i]) for i in range(len(prompts))]
+    return {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+
+
+def run(quick: bool = False):
+    fams = get_families()
+    n = 8 if quick else 24
+    out = {}
+    for dataset, p_text in (("diffusiondb", 0.0), ("drawtext", 1.0)):
+        seeds = np.arange(4000, 4000 + n)
+        prompts = [synth.sample_prompt(int(s), p_text=p_text) for s in seeds]
+        for fam_name in ("XL", "F3"):
+            fam = fams[fam_name]
+            conds = jnp.asarray(
+                np.stack([synth.embed(p, fam_name) for p in prompts])
+            )
+            xT = jax.random.normal(
+                jax.random.PRNGKey(7), (n,) + fam.spec.latent_shape
+            )
+            for s in STEPS:
+                plan = make_relay_plan(fam.spec, s)
+                t0 = time.perf_counter()
+                x, _ = relay_generate(
+                    fam.spec, plan, fam.large_fn, fam.large_params,
+                    fam.small_fn, fam.small_params, xT, conds, conds,
+                )
+                dt = time.perf_counter() - t0
+                q = _quality(x, prompts)
+                out[f"{dataset}|{fam_name}-{s}"] = q
+                emit(
+                    f"fig5_{dataset}_{fam_name}_s{s}",
+                    1e6 * dt / n,
+                    ";".join(f"{k}={v:.4f}" for k, v in q.items()),
+                )
+            # standalone baselines
+            t0 = time.perf_counter()
+            x_full, _ = ab.full_sample(
+                fam.spec.kind, fam.large_fn, fam.large_params, xT,
+                fam.spec.sigmas_edge, conds,
+            )
+            dt = time.perf_counter() - t0
+            q = _quality(x_full, prompts)
+            out[f"{dataset}|{fam_name}-large-full"] = q
+            emit(f"fig5_{dataset}_{fam_name}_largefull", 1e6 * dt / n,
+                 ";".join(f"{k}={v:.4f}" for k, v in q.items()))
+            t0 = time.perf_counter()
+            x_small, _ = ab.full_sample(
+                fam.spec.kind, fam.small_fn, fam.small_params, xT,
+                fam.spec.sigmas_device, conds,
+            )
+            dt = time.perf_counter() - t0
+            q = _quality(x_small, prompts)
+            out[f"{dataset}|{fam_name}-small-standalone"] = q
+            emit(f"fig5_{dataset}_{fam_name}_smallstandalone", 1e6 * dt / n,
+                 ";".join(f"{k}={v:.4f}" for k, v in q.items()))
+    save_json("fig5_relay_step_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Roofline table (deliverable g): reads the dry-run JSON and emits, per
+(arch × shape × mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, per-device memory, and a one-line improvement note."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS, emit, save_json
+
+NOTES = {
+    "compute": "compute-bound: raise MFU — fuse/flash attention, larger "
+               "per-chip batch, reduce remat recompute",
+    "memory": "HBM-bound: cut bytes — chunked CE / flash attention (no S² "
+              "scores), int8 states, fp8/bf16 cache",
+    "collective": "ICI-bound: re-shard — fewer TP all-reduces (2D sharding/"
+                  "sequence-parallel norms), overlap collectives with compute",
+}
+
+
+def load(path="results/dryrun.json"):
+    return json.loads(Path(path).read_text())
+
+
+def run(quick: bool = False, path: str = "results/dryrun.json", tag: str = ""):
+    data = load(path)
+    table = {}
+    for key, rec in sorted(data.items()):
+        if "error" in rec or rec.get("skipped"):
+            continue
+        if bool(rec.get("mini")):
+            continue
+        if (rec.get("tag") or "") != tag:
+            continue
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        t_c, t_m, t_x = rec["t_compute_s"], rec["t_memory_s"], rec["t_collective_s"]
+        dom = rec["dominant"]
+        bound = max(t_c, t_m, t_x)
+        row = {
+            "t_compute_s": t_c,
+            "t_memory_s": t_m,
+            "t_collective_s": t_x,
+            "dominant": dom,
+            "bound_s": bound,
+            "useful_flops_ratio": rec.get("useful_flops_ratio"),
+            "roofline_fraction": rec.get("roofline_fraction"),
+            "peak_gb_per_device": rec["per_device_bytes"]["peak_estimate"] / 1e9,
+            "coll_counts": rec.get("coll_counts", {}),
+            "note": NOTES[dom],
+        }
+        table[key] = row
+        emit(
+            f"roofline_{arch}_{shape}_{mesh}",
+            bound * 1e6,
+            f"compute={t_c:.3f}s;memory={t_m:.3f}s;collective={t_x:.3f}s;"
+            f"dominant={dom};useful={row['useful_flops_ratio']:.3f};"
+            f"frac={row['roofline_fraction']:.4f};"
+            f"peakGB={row['peak_gb_per_device']:.1f}",
+        )
+    save_json("roofline_table", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

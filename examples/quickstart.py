@@ -1,0 +1,78 @@
+"""Quickstart: relay inference in ~40 lines.
+
+Loads (or quickly trains) the two relay families, sigma-matches a handoff at
+s=15, and generates latents three ways: full large model, relay, standalone
+small model — printing the quality/latency tradeoff the RISE scheduler
+navigates.
+
+  PYTHONPATH=src python examples/quickstart.py [--fast]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accel_baselines as ab
+from repro.core.relay import make_relay_plan, relay_generate
+from repro.diffusion import synth
+from repro.diffusion.train import get_or_train_families
+from repro.serving import latency as lat
+from repro.serving import metrics as qm
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true", help="train tiny 120-step families")
+ap.add_argument("--family", default="F3", choices=["F3", "XL"])
+ap.add_argument("--s", type=int, default=15)
+args = ap.parse_args()
+
+steps = 120 if args.fast else 1500
+fams = get_or_train_families(
+    ckpt_dir="results/ckpts" if not args.fast else "results/ckpts_fast",
+    steps=steps, verbose=True,
+)
+fam = fams[args.family]
+
+# a text-rendering prompt (family F3 can render it; XL cannot — Finding 2)
+prompt = synth.sample_prompt(123, p_text=1.0)
+cond = jnp.asarray(synth.embed(prompt, args.family))[None]
+xT = jax.random.normal(jax.random.PRNGKey(0), (1,) + fam.spec.latent_shape)
+
+plan = make_relay_plan(fam.spec, args.s)
+print(f"\nsigma matching (Eq. 4): edge s={plan.s} (σ={plan.sigma_handoff:.3f})"
+      f" → device s'={plan.s_prime} (σ={plan.sigma_resume:.3f})")
+
+runs = {}
+t0 = time.time()
+x_full, _ = ab.full_sample(fam.spec.kind, fam.large_fn, fam.large_params, xT,
+                           fam.spec.sigmas_edge, cond)
+runs["full-large"] = (x_full, time.time() - t0, lat.full_model_latency(
+    "sd3l" if args.family == "F3" else "sdxl"))
+
+t0 = time.time()
+x_relay, info = relay_generate(fam.spec, plan, fam.large_fn, fam.large_params,
+                               fam.small_fn, fam.small_params, xT, cond, cond)
+edge_pool, dev_pool = ("sd3l", "sd3m") if args.family == "F3" else ("sdxl", "vega")
+t_cal = (plan.s * lat.STEP_COST[edge_pool]
+         + (fam.spec.t_device - plan.s_prime) * lat.STEP_COST[dev_pool])
+runs["relay"] = (x_relay, time.time() - t0, t_cal)
+
+t0 = time.time()
+x_small, _ = ab.full_sample(fam.spec.kind, fam.small_fn, fam.small_params, xT,
+                            fam.spec.sigmas_device, cond)
+runs["small-standalone"] = (x_small, time.time() - t0,
+                            lat.full_model_latency(dev_pool))
+
+print(f"\n{'config':18s} {'CLIP':>7s} {'ImgRwd':>7s} {'OCR':>6s} "
+      f"{'wall(s)':>8s} {'testbed(s)':>10s} {'speedup':>8s}")
+base = runs["full-large"][2]
+for name, (x, wall, cal) in runs.items():
+    q = qm.quality_metrics(np.asarray(x)[0], prompt)
+    print(f"{name:18s} {q['clip']:7.4f} {q['ir']:7.4f} {q['ocr']:6.3f} "
+          f"{wall:8.2f} {cal:10.2f} {base/cal:7.2f}x")
+print(f"\nrelay transferred {info['transfer_bytes']} bytes at the handoff")

@@ -1,0 +1,14 @@
+"""End-to-end multi-tenant serving simulation (the paper's deployment kind):
+Poisson arrivals, 4 GPU pools, 11 relay arms, LinUCB online scheduling.
+
+  PYTHONPATH=src python examples/serve_simulation.py --requests 150
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Train an LM from the assigned-architecture zoo on the synthetic token
+pipeline, with periodic async checkpointing and kill-resume support.
+
+  PYTHONPATH=src python examples/train_lm.py --arch recurrentgemma-9b --steps 60
+  PYTHONPATH=src python examples/train_lm.py --arch recurrentgemma-9b --resume
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

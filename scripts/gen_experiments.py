@@ -1,0 +1,78 @@
+"""Assemble EXPERIMENTS.md from the results JSONs + the handwritten
+narrative (scripts/experiments_body.md)."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro import configs  # noqa: E402
+from repro.analysis.params import min_bytes_estimate  # noqa: E402
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+
+
+def fmt_s(x):
+    return f"{x:.3g}" if x is not None else "—"
+
+
+def dryrun_table(data, mesh):
+    rows = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "useful | peak GB/chip | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        rec = data[key]
+        if rec.get("mesh") != mesh or rec.get("tag") or rec.get("mini"):
+            continue
+        if "t_compute_s" not in rec:
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(rec['t_compute_s'])} "
+            f"| {fmt_s(rec['t_memory_s'])} | {fmt_s(rec['t_collective_s'])} "
+            f"| {rec['dominant']} | {rec['useful_flops_ratio']:.2f} "
+            f"| {rec['per_device_bytes']['peak_estimate'] / 1e9:.1f} "
+            f"| {rec.get('roofline_fraction', 0):.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def mem_fraction_table(data):
+    """Memory-floor analysis for decode cells (per DESIGN.md §7)."""
+    rows = [
+        "| arch | shape | HLO bytes/chip | analytic floor/chip | floor frac |",
+        "|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        rec = data[key]
+        if rec.get("mesh") != "single" or rec.get("tag") or rec.get("mini"):
+            continue
+        if rec.get("shape") not in ("decode_32k", "long_500k"):
+            continue
+        if "hlo_bytes_per_chip" not in rec:
+            continue
+        cfg = configs.get_config(rec["arch"])
+        floor = min_bytes_estimate(cfg, SHAPES[rec["shape"]]) / rec["n_chips"]
+        frac = floor / max(rec["hlo_bytes_per_chip"], 1)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {rec['hlo_bytes_per_chip']/1e9:.1f} GB | {floor/1e9:.2f} GB "
+            f"| {frac:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    data = json.loads((ROOT / "results/dryrun.json").read_text())
+    body = (ROOT / "scripts/experiments_body.md").read_text()
+    body = body.replace("{{TABLE_SINGLE}}", dryrun_table(data, "single"))
+    body = body.replace("{{TABLE_MULTI}}", dryrun_table(data, "multi"))
+    body = body.replace("{{TABLE_MEMFLOOR}}", mem_fraction_table(data))
+    (ROOT / "EXPERIMENTS.md").write_text(body)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

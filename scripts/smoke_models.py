@@ -1,0 +1,48 @@
+"""Quick dev check: every reduced arch inits, forwards, and decodes."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import make_reduced
+from repro.models import transformer as tr
+
+B, S = 2, 16
+
+
+def run(name):
+    cfg = make_reduced(configs.get_config(name))
+    key = jax.random.PRNGKey(0)
+    params = tr.init_model(key, cfg)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.ctx_dim:
+        batch["ctx"] = jnp.ones((B, cfg.ctx_len, cfg.ctx_dim), jnp.float32)
+    if cfg.encoder is not None:
+        batch["ctx"] = jnp.ones((B, cfg.encoder.n_frames, cfg.encoder.d_model), jnp.float32)
+    logits, aux, extras = jax.jit(lambda p, b: tr.model_fwd(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab), logits.shape
+    assert not bool(jnp.isnan(logits).any()), "NaN in logits"
+
+    # decode step
+    cache = tr.init_model_cache(cfg, B, S)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    ctx = batch.get("ctx")
+    dl, cache2 = jax.jit(
+        lambda p, c, t: tr.decode_step(p, cfg, c, t, jnp.int32(3), ctx=ctx)
+    )(params, cache, tok)
+    assert dl.shape == (B, 1, cfg.padded_vocab)
+    assert not bool(jnp.isnan(dl).any()), "NaN in decode logits"
+    print(f"  OK {name:30s} params={n_params:,} logits={logits.shape}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or configs.list_archs()
+    for n in names:
+        try:
+            run(n)
+        except Exception as e:
+            print(f"  FAIL {n}: {type(e).__name__}: {e}")
+            raise

@@ -1,0 +1,218 @@
+"""Roofline-term derivation from a compiled (SPMD-partitioned) HLO module.
+
+``cost_analysis`` counts while-loop (lax.scan) bodies ONCE, so both FLOPs and
+collective bytes must be trip-count-corrected.  The partitioned HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on each while op, which we
+use to build a per-computation execution-count map (composed transitively for
+nested scans: grad-accum × layers).
+
+Methodology (documented for EXPERIMENTS.md):
+* FLOPs: dot-op FLOPs (2·prod(result)·prod(contracted)) summed per
+  computation × trips; elementwise FLOPs are taken from cost_analysis once
+  (dots dominate ≫10×).
+* bytes: cost_analysis "bytes accessed" + (trips−1)·(dot operand/result
+  bytes) for scanned computations — approximate, dominated by weight reads.
+* collective bytes: per-op result-shape bytes × op factor (all-reduce 2×,
+  reduce-scatter n×, others 1×) × trips.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_ASSIGN_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]"
+)
+# op token immediately followed by '(' — metadata op_name strings use '/'
+# separators and never match this form.
+_OP_RE = re.compile(
+    r"\s(while|dot|all-gather(?:-start)?|all-reduce(?:-start)?|"
+    r"reduce-scatter|all-to-all|collective-permute(?:-start)?)\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+\([^)]*.*\{\s*$")
+_WHILE_RE = re.compile(r"body=%?([\w.-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_dims(dims: str):
+    return [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+
+def parse_hlo(text: str):
+    """Split into computations, gather per-computation stats + while edges."""
+    comps: Dict[str, HloStats] = {}
+    while_edges = []  # (parent_comp, body_comp, trips)
+    shapes: Dict[str, tuple] = {}  # name → (dtype, dims)
+    cur = None
+
+    for line in text.splitlines():
+        s = line.strip()
+        mc = _COMP_RE.match(line) if line and not line.startswith(" ") else None
+        if mc and ("{" in line):
+            cur = mc.group(1)
+            comps.setdefault(cur, HloStats())
+            continue
+        if s == "}":
+            continue
+        ma = _ASSIGN_RE.match(s)
+        if not ma or cur is None:
+            continue
+        name, dtype, dims = ma.groups()
+        shapes[name] = (dtype, dims)
+        mo = _OP_RE.search(s.split("metadata=")[0])
+        op = mo.group(1) if mo else ""
+        st = comps[cur]
+
+        if op == "dot":
+            res_dims = _shape_dims(dims)
+            mcd = _CONTRACT_RE.search(s)
+            contract = 1
+            args = s.split("dot(", 1)[1].split(")")[0] if "dot(" in s else ""
+            ops = _OPERANDS_RE.findall(args)
+            if mcd and ops and ops[0] in shapes:
+                lhs_dims = _shape_dims(shapes[ops[0]][1])
+                for ci in mcd.group(1).split(","):
+                    if ci:
+                        contract *= lhs_dims[int(ci)]
+            flops = 2.0 * contract
+            for d in res_dims:
+                flops *= d
+            st.dot_flops += flops
+            st.dot_bytes += _shape_bytes(dtype, dims)
+            for o in ops[:2]:
+                if o in shapes:
+                    st.dot_bytes += _shape_bytes(*shapes[o])
+        elif op == "while":
+            mb = _WHILE_RE.search(s)
+            mt = _TRIP_RE.search(s)
+            trips = int(mt.group(1)) if mt else 1
+            if mb:
+                while_edges.append((cur, mb.group(1), trips))
+        elif any(s_op in op for s_op in _COLL_OPS):
+            n = 1
+            mg = _GROUPS_IOTA_RE.search(s)
+            if mg:
+                n = int(mg.group(2))
+            else:
+                ml = _GROUPS_LIST_RE.search(s)
+                if ml:
+                    n = len(ml.group(1).split(","))
+            base = _shape_bytes(dtype, dims)
+            frac = (n - 1) / max(n, 1)
+            if "all-reduce" in op:
+                moved = 2.0 * base * frac
+            elif "reduce-scatter" in op:
+                moved = base * n * frac
+            else:
+                moved = base * frac if n > 1 else base
+            kind = next(k for k in _COLL_OPS if k in op)
+            st.coll_bytes += moved
+            st.coll_counts[kind] += 1
+    return comps, while_edges
+
+
+def _exec_counts(comps, while_edges, entry_hint: str = "main"):
+    """Multiply nested while bodies transitively."""
+    counts = {c: 1.0 for c in comps}
+    # iterate to fixpoint (nesting depth ≤ 3 in practice)
+    for _ in range(4):
+        for parent, body, trips in while_edges:
+            counts[body] = counts.get(parent, 1.0) * trips
+    return counts
+
+
+def analyze(compiled_text: str, cost: dict, n_chips: int, *,
+            model_flops: Optional[float] = None) -> dict:
+    comps, while_edges = parse_hlo(compiled_text)
+    counts = _exec_counts(comps, while_edges)
+
+    dot_flops = sum(st.dot_flops * counts[c] for c, st in comps.items())
+    dot_bytes = sum(st.dot_bytes * counts[c] for c, st in comps.items())
+    coll_bytes = sum(st.coll_bytes * counts[c] for c, st in comps.items())
+    coll_counts: Dict[str, float] = defaultdict(float)
+    for c, st in comps.items():
+        for k, v in st.coll_counts.items():
+            coll_counts[k] += v * counts[c]
+
+    raw_flops = float(cost.get("flops", 0.0) or 0.0)
+    raw_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    # scanned-dot correction applied on top of the once-counted aggregate
+    once_dots = sum(st.dot_flops for st in comps.values())
+    once_dot_bytes = sum(st.dot_bytes for st in comps.values())
+    hlo_flops = raw_flops + (dot_flops - once_dots)
+    hlo_bytes = raw_bytes + (dot_bytes - once_dot_bytes)
+
+    # NOTE: the partitioned HLO is per-device → flops/bytes are per-chip.
+    t_compute = hlo_flops / PEAK_FLOPS
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "hlo_flops_per_chip": hlo_flops,
+        "hlo_bytes_per_chip": hlo_bytes,
+        "coll_bytes_per_chip": coll_bytes,
+        "coll_counts": dict(coll_counts),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "raw_cost_flops": raw_flops,
+        "raw_cost_bytes": raw_bytes,
+    }
+    if model_flops:
+        out["model_flops_total"] = model_flops
+        out["useful_flops_ratio"] = model_flops / max(hlo_flops * n_chips, 1.0)
+        bound = max(t_compute, t_memory, t_coll)
+        ideal = model_flops / (n_chips * PEAK_FLOPS)
+        out["roofline_fraction"] = ideal / max(bound, 1e-12)
+    return out
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D for training, 2·N_active·D for inference."""
+    from repro.analysis.params import active_params, total_params
+
+    n_act = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens

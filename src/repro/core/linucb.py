@@ -1,0 +1,101 @@
+"""LinUCB contextual-bandit scheduler state + Algorithm 1 (arm selection).
+
+Scoring (Eq. 7):  p_a = θ̂_aᵀc + α·√(cᵀA_a⁻¹c) + β·√(ln(n+1)/(1+n_a))
+Sampling (Eq. 8): softmax over p_a with temperature τ (Eq. 9, decaying).
+Update (Eq. 10):  A_a += ccᵀ + λI;  b_a += r·c   (per-step λI shrinkage).
+Decay (Eq. 11):   α, β decay linearly after the warm-up period N_w.
+
+Vectorized over arms and fully jittable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LinUCBParams:
+    alpha0: float = 1.0
+    alpha_min: float = 0.05
+    beta0: float = 0.5
+    beta_min: float = 0.02
+    tau0: float = 0.35
+    tau_min: float = 0.02
+    warmup: int = 60  # N_w
+    decay_k: float = 400.0  # shared decay constant K
+    lam: float = 1e-3  # per-step ridge increment λ
+    n_min: int = 3  # forced-exploration minimum pulls (Alg. 2)
+
+
+class LinUCBState(NamedTuple):
+    A: jnp.ndarray  # (K, d, d)
+    b: jnp.ndarray  # (K, d)
+    counts: jnp.ndarray  # (K,)
+
+
+def init_state(n_arms: int, d: int) -> LinUCBState:
+    return LinUCBState(
+        A=jnp.tile(jnp.eye(d, dtype=jnp.float32), (n_arms, 1, 1)),
+        b=jnp.zeros((n_arms, d), jnp.float32),
+        counts=jnp.zeros((n_arms,), jnp.float32),
+    )
+
+
+def _decayed(p: LinUCBParams, n):
+    prog = jnp.maximum(0.0, n - p.warmup) / p.decay_k
+    alpha = jnp.maximum(p.alpha_min, p.alpha0 - prog)
+    beta = jnp.maximum(p.beta_min, p.beta0 * (1.0 - prog))
+    tau = jnp.maximum(p.tau_min, p.tau0 * (1.0 - prog))
+    return alpha, beta, tau
+
+
+def scores(state: LinUCBState, ctx: jnp.ndarray, p: LinUCBParams) -> jnp.ndarray:
+    """Eq. 7 UCB scores for every arm (K,)."""
+    n = jnp.sum(state.counts)
+    alpha, beta, _ = _decayed(p, n)
+    A_inv = jnp.linalg.inv(state.A)  # (K,d,d) — d=8: cheap & exact
+    theta = jnp.einsum("kde,ke->kd", A_inv, state.b)
+    exploit = theta @ ctx
+    explore_ctx = jnp.sqrt(jnp.clip(jnp.einsum("d,kde,e->k", ctx, A_inv, ctx), 0.0))
+    explore_freq = jnp.sqrt(jnp.log(n + 1.0) / (1.0 + state.counts))
+    return exploit + alpha * explore_ctx + beta * explore_freq
+
+
+def select(
+    state: LinUCBState,
+    ctx: jnp.ndarray,
+    key,
+    p: LinUCBParams,
+    avail: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Algorithm 1 + forced exploration (Alg. 2 line 8): returns arm index.
+
+    ``avail``: boolean (K,) mask of currently-available arms."""
+    k = state.A.shape[0]
+    avail = jnp.ones((k,), bool) if avail is None else avail
+    n = jnp.sum(state.counts)
+    _, _, tau = _decayed(p, n)
+
+    s = scores(state, ctx, p)
+    s = jnp.where(avail, s, -jnp.inf)
+    soft_arm = jax.random.categorical(key, s / tau)
+
+    # forced exploration: any available arm with counts < N_min → least-pulled
+    under = avail & (state.counts < p.n_min)
+    forced_arm = jnp.argmin(jnp.where(under, state.counts, jnp.inf))
+    return jnp.where(jnp.any(under), forced_arm, soft_arm)
+
+
+def update(
+    state: LinUCBState, arm, ctx: jnp.ndarray, reward, p: LinUCBParams
+) -> LinUCBState:
+    """Eq. 10 with per-step λI shrinkage (only the pulled arm)."""
+    d = ctx.shape[0]
+    outer = jnp.outer(ctx, ctx) + p.lam * jnp.eye(d, dtype=jnp.float32)
+    one_hot = jax.nn.one_hot(arm, state.A.shape[0], dtype=jnp.float32)
+    A = state.A + one_hot[:, None, None] * outer[None]
+    b = state.b + one_hot[:, None] * (reward * ctx)[None]
+    return LinUCBState(A=A, b=b, counts=state.counts + one_hot)

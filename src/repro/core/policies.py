@@ -1,0 +1,284 @@
+"""Scheduling policies: RISE-LinUCB (paper Alg. 1+2) and the four baselines
+from §V-D — Round-Robin, Greedy (makespan heuristic, fixed mid relay step),
+PPO and SAC (offline-trained on the same data, per the paper's protocol).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linucb
+from repro.core.context import CTX_DIM
+from repro.serving.arms import ARMS, N_ARMS
+
+
+class Policy:
+    name = "policy"
+
+    def select(self, ctx: np.ndarray, avail: np.ndarray) -> int:
+        raise NotImplementedError
+
+    def update(self, ctx: np.ndarray, arm: int, reward: float) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# RISE (LinUCB) + its ablation variants
+# ---------------------------------------------------------------------------
+
+
+class RisePolicy(Policy):
+    name = "RISE"
+
+    def __init__(
+        self,
+        seed: int = 0,
+        params: Optional[linucb.LinUCBParams] = None,
+        *,
+        use_context: bool = True,  # ablation: w/o Context
+        forced_exploration: bool = True,  # ablation: w/o Forced Exploration
+        fixed_relay_step: Optional[int] = None,  # ablation: Fixed Relay Step
+    ):
+        self.p = params or linucb.LinUCBParams()
+        if not forced_exploration:
+            self.p = linucb.LinUCBParams(**{**self.p.__dict__, "n_min": 0})
+        self.state = linucb.init_state(N_ARMS, CTX_DIM)
+        self.key = jax.random.PRNGKey(seed)
+        self.use_context = use_context
+        self.fixed_relay_step = fixed_relay_step
+        self._select = jax.jit(
+            lambda st, c, k, av: linucb.select(st, c, k, self.p, av)
+        )
+        self._update = jax.jit(
+            lambda st, a, c, r: linucb.update(st, a, c, r, self.p)
+        )
+
+    def _ctx(self, ctx):
+        if not self.use_context:
+            return np.ones_like(ctx) / np.sqrt(len(ctx))
+        return ctx
+
+    def _mask(self, avail):
+        if self.fixed_relay_step is None:
+            return avail
+        keep = np.array(
+            [a.relay_step in (None, self.fixed_relay_step) for a in ARMS]
+        )
+        out = avail & keep
+        return out if out.any() else avail
+
+    def select(self, ctx, avail):
+        self.key, sub = jax.random.split(self.key)
+        arm = self._select(
+            self.state, jnp.asarray(self._ctx(ctx)), sub, jnp.asarray(self._mask(avail))
+        )
+        return int(arm)
+
+    def update(self, ctx, arm, reward):
+        self.state = self._update(
+            self.state, jnp.int32(arm), jnp.asarray(self._ctx(ctx)), jnp.float32(reward)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Round-Robin
+# ---------------------------------------------------------------------------
+
+
+class RoundRobinPolicy(Policy):
+    name = "RR"
+
+    def __init__(self):
+        self.i = 0
+
+    def select(self, ctx, avail):
+        for _ in range(N_ARMS):
+            arm = self.i % N_ARMS
+            self.i += 1
+            if avail[arm]:
+                return arm
+        return int(np.argmax(avail))
+
+
+# ---------------------------------------------------------------------------
+# Greedy: least-loaded pool, fixed mid-range relay step
+# ---------------------------------------------------------------------------
+
+
+class GreedyPolicy(Policy):
+    name = "Greedy"
+    MID = 15
+
+    def select(self, ctx, avail):
+        # candidates: standalone + the two s=15 relays; pick min expected
+        # makespan using the occupancy features in the context tail
+        l_vega, l_sdxl, l_sd3 = ctx[5], ctx[6], ctx[7]
+        from repro.serving.latency import STEP_COST, T_FULL
+
+        cands = []
+        for a in ARMS:
+            if not avail[a.idx]:
+                continue
+            if a.relay_step not in (None, self.MID):
+                continue
+            if a.family is None:
+                t = STEP_COST["vega"] * T_FULL["vega"] * (1 + 2 * l_vega)
+            elif a.family == "XL":
+                t = (
+                    STEP_COST["sdxl"] * self.MID
+                    + STEP_COST["vega"] * 17
+                ) * (1 + 2 * max(l_sdxl, l_vega))
+            else:
+                t = (
+                    STEP_COST["sd3l"] * self.MID
+                    + STEP_COST["sd3m"] * 35
+                ) * (1 + 2 * l_sd3)
+            cands.append((t, a.idx))
+        if not cands:
+            return int(np.argmax(avail))
+        return min(cands)[1]
+
+
+# ---------------------------------------------------------------------------
+# PPO (offline-trained, discrete)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, sizes):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (a, b)) / jnp.sqrt(a),
+            "b": jnp.zeros((b,)),
+        }
+        for k, a, b in zip(ks, sizes[:-1], sizes[1:])
+    ]
+
+
+def _mlp(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.tanh(x)
+    return x
+
+
+class PPOPolicy(Policy):
+    name = "PPO"
+
+    def __init__(self, seed: int = 0, lr: float = 3e-3, clip: float = 0.2):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        self.pi = _mlp_init(k1, [CTX_DIM, 64, 64, N_ARMS])
+        self.v = _mlp_init(k2, [CTX_DIM, 64, 1])
+        self.lr, self.clip = lr, clip
+        self.key = key
+        self.stochastic = False
+
+        def loss_fn(pi, v, ctx, arm, reward, logp_old):
+            logits = _mlp(pi, ctx)
+            logp = jax.nn.log_softmax(logits)[jnp.arange(ctx.shape[0]), arm]
+            val = _mlp(v, ctx)[:, 0]
+            adv = reward - jax.lax.stop_gradient(val)
+            ratio = jnp.exp(logp - logp_old)
+            pg = -jnp.mean(
+                jnp.minimum(
+                    ratio * adv, jnp.clip(ratio, 1 - clip, 1 + clip) * adv
+                )
+            )
+            vf = jnp.mean((val - reward) ** 2)
+            ent = -jnp.mean(
+                jnp.sum(jax.nn.softmax(logits) * jax.nn.log_softmax(logits), -1)
+            )
+            return pg + 0.5 * vf - 0.01 * ent
+
+        self._grad = jax.jit(jax.grad(loss_fn, argnums=(0, 1)))
+        self._logits = jax.jit(lambda pi, c: _mlp(pi, c))
+
+    def train_offline(self, contexts, reward_fn, *, epochs=12, batch=64, seed=1):
+        """reward_fn(i, arm) → reward for training context i."""
+        rng = np.random.default_rng(seed)
+        n = len(contexts)
+        logp_all = None
+        for ep in range(epochs):
+            idx = rng.permutation(n)
+            for lo in range(0, n, batch):
+                sel = idx[lo : lo + batch]
+                ctx = jnp.asarray(contexts[sel])
+                logits = np.asarray(self._logits(self.pi, ctx))
+                probs = np.exp(logits - logits.max(-1, keepdims=True))
+                probs /= probs.sum(-1, keepdims=True)
+                arms = np.array([rng.choice(N_ARMS, p=p) for p in probs])
+                rewards = np.array([reward_fn(i, a) for i, a in zip(sel, arms)])
+                logp_old = np.log(probs[np.arange(len(sel)), arms] + 1e-9)
+                g_pi, g_v = self._grad(
+                    self.pi, self.v, ctx, jnp.asarray(arms),
+                    jnp.asarray(rewards, jnp.float32), jnp.asarray(logp_old, jnp.float32),
+                )
+                self.pi = jax.tree.map(lambda p, g: p - self.lr * g, self.pi, g_pi)
+                self.v = jax.tree.map(lambda p, g: p - self.lr * g, self.v, g_v)
+
+    def select(self, ctx, avail):
+        logits = np.array(self._logits(self.pi, jnp.asarray(ctx[None])))[0]
+        logits[~avail] = -np.inf
+        return int(np.argmax(logits))
+
+
+# ---------------------------------------------------------------------------
+# SAC (discrete, offline-trained)
+# ---------------------------------------------------------------------------
+
+
+class SACPolicy(Policy):
+    name = "SAC"
+
+    def __init__(self, seed: int = 0, lr: float = 3e-3, alpha: float = 0.25):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.q1 = _mlp_init(k1, [CTX_DIM, 64, 64, N_ARMS])
+        self.q2 = _mlp_init(k2, [CTX_DIM, 64, 64, N_ARMS])
+        self.alpha, self.lr = alpha, lr
+
+        def q_loss(q, ctx, arm, reward):
+            qv = _mlp(q, ctx)[jnp.arange(ctx.shape[0]), arm]
+            return jnp.mean((qv - reward) ** 2)
+
+        self._qgrad = jax.jit(jax.grad(q_loss))
+        self._qf = jax.jit(lambda q, c: _mlp(q, c))
+
+    def train_offline(self, contexts, reward_fn, *, epochs=12, batch=64, seed=2):
+        rng = np.random.default_rng(seed)
+        n = len(contexts)
+        for ep in range(epochs):
+            idx = rng.permutation(n)
+            for lo in range(0, n, batch):
+                sel = idx[lo : lo + batch]
+                ctx = jnp.asarray(contexts[sel])
+                q = np.minimum(
+                    np.asarray(self._qf(self.q1, ctx)), np.asarray(self._qf(self.q2, ctx))
+                )
+                # entropy-regularized softmax policy over Q
+                p = np.exp((q - q.max(-1, keepdims=True)) / self.alpha)
+                p /= p.sum(-1, keepdims=True)
+                arms = np.array([rng.choice(N_ARMS, p=pi) for pi in p])
+                rewards = jnp.asarray(
+                    [reward_fn(i, a) for i, a in zip(sel, arms)], jnp.float32
+                )
+                for qname in ("q1", "q2"):
+                    qp = getattr(self, qname)
+                    g = self._qgrad(qp, ctx, jnp.asarray(arms), rewards)
+                    setattr(
+                        self, qname,
+                        jax.tree.map(lambda p_, g_: p_ - self.lr * g_, qp, g),
+                    )
+
+    def select(self, ctx, avail):
+        q = np.minimum(
+            np.asarray(self._qf(self.q1, jnp.asarray(ctx[None])))[0],
+            np.asarray(self._qf(self.q2, jnp.asarray(ctx[None])))[0],
+        )
+        q[~avail] = -np.inf
+        return int(np.argmax(q))

@@ -1,0 +1,43 @@
+"""Noise schedules for the two relay families.
+
+* Family "XL" (UNet / ε-prediction, SDXL-like): VP diffusion sampled with
+  DDIM over a **Karras σ ladder** — edge model T_e=50, device model T_d=25,
+  *different* non-uniform schedules, so the paper's sigma-matching argmin
+  (Eq. 4) is a real search.
+* Family "F3" (MMDiT / rectified flow, SD3.5-like): linear t-schedule,
+  T=50 for both scales → sigma matching trivially resolves to s'=s.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def karras_sigmas(n: int, sigma_min: float = 0.03, sigma_max: float = 10.0,
+                  rho: float = 7.0) -> jnp.ndarray:
+    """Monotonically decreasing Karras (EDM) sigma ladder of length n+1
+    (last entry 0)."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    ramp = sigma_max ** (1 / rho) + i / (n - 1) * (
+        sigma_min ** (1 / rho) - sigma_max ** (1 / rho)
+    )
+    sig = ramp ** rho
+    return jnp.concatenate([sig, jnp.zeros((1,), jnp.float32)])
+
+
+def rf_times(n: int) -> jnp.ndarray:
+    """Linear rectified-flow times 1 → 0, length n+1.  σ(t)=t."""
+    return jnp.linspace(1.0, 0.0, n + 1).astype(jnp.float32)
+
+
+def vp_alpha_bar(sigma: jnp.ndarray) -> jnp.ndarray:
+    """VP ᾱ from the VE-style σ: ᾱ = 1/(1+σ²)  (so x_t = √ᾱ·x0 + √(1-ᾱ)·n)."""
+    return 1.0 / (1.0 + jnp.square(sigma))
+
+
+def sigma_match(sigmas_edge: jnp.ndarray, s: int, sigmas_device: jnp.ndarray) -> int:
+    """Eq. (4): device-side start step s' = argmin_j |σ_j^(d) − σ_s^(e)|.
+
+    Searches the device ladder's *step entry points* (indices 0..T_d-1)."""
+    target = sigmas_edge[s]
+    j = jnp.argmin(jnp.abs(sigmas_device[:-1] - target))
+    return int(j)

@@ -1,0 +1,92 @@
+"""Relay family registry: schedules + net configs + trained parameters."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.relay import FamilySpec
+from repro.core.schedules import karras_sigmas, rf_times
+from repro.models import diffusion_nets as dn
+
+T_EDGE_XL, T_DEV_XL = 50, 25  # SDXL / Vega (Karras, different ladders)
+T_F3 = 50  # SD3.5 L and M (identical linear schedule)
+
+
+def xl_spec() -> FamilySpec:
+    return FamilySpec(
+        name="XL", kind="ddim",
+        sigmas_edge=karras_sigmas(T_EDGE_XL),
+        sigmas_device=karras_sigmas(T_DEV_XL),
+    )
+
+
+def f3_spec() -> FamilySpec:
+    return FamilySpec(
+        name="F3", kind="rf",
+        sigmas_edge=rf_times(T_F3),
+        sigmas_device=rf_times(T_F3),
+    )
+
+
+NET_CONFIGS = {
+    ("XL", "large"): dn.XL_LARGE,
+    ("XL", "small"): dn.XL_SMALL,
+    ("F3", "large"): dn.F3_LARGE,
+    ("F3", "small"): dn.F3_SMALL,
+}
+
+SPECS = {"XL": xl_spec, "F3": f3_spec}
+
+
+def rf_velocity_from_x0(x0_hat, x, t):
+    """RF velocity from the x̂0-parameterized net: v = (x_t − x̂0)/t."""
+    t = jnp.maximum(jnp.asarray(t, jnp.float32), 1e-3)
+    while t.ndim < x.ndim:
+        t = t[..., None]
+    return (x - x0_hat) / t
+
+
+def vp_eps_from_x0(x0_hat, x, sigma):
+    """VP ε̂ from the x̂0-parameterized net: ε̂ = (x − √ᾱ·x̂0)/√(1−ᾱ).
+    Both nets predict the clean latent (well-conditioned at every noise
+    level); DDIM/RF updates are unchanged."""
+    from repro.core.schedules import vp_alpha_bar
+
+    ab = vp_alpha_bar(jnp.asarray(sigma, jnp.float32))
+    while ab.ndim < x.ndim:
+        ab = ab[..., None]
+    return (x - jnp.sqrt(ab) * x0_hat) / jnp.sqrt(jnp.maximum(1.0 - ab, 1e-6))
+
+
+@dataclass
+class Family:
+    spec: FamilySpec
+    large_cfg: dn.DiffNetConfig
+    small_cfg: dn.DiffNetConfig
+    large_params: dict
+    small_params: dict
+
+    def large_fn(self, params, x, t, cond):
+        out = dn.apply_net(params, self.large_cfg, x, t, cond)
+        if self.spec.kind == "rf":
+            return rf_velocity_from_x0(out, x, t)  # x̂0-parameterized net
+        return vp_eps_from_x0(out, x, t)
+
+    def small_fn(self, params, x, t, cond):
+        out = dn.apply_net(params, self.small_cfg, x, t, cond)
+        if self.spec.kind == "rf":
+            return rf_velocity_from_x0(out, x, t)
+        return vp_eps_from_x0(out, x, t)
+
+
+def make_family(name: str, large_params, small_params) -> Family:
+    return Family(
+        spec=SPECS[name](),
+        large_cfg=NET_CONFIGS[(name, "large")],
+        small_cfg=NET_CONFIGS[(name, "small")],
+        large_params=large_params,
+        small_params=small_params,
+    )

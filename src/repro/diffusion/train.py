@@ -1,0 +1,288 @@
+"""Training for the relay-family denoisers on the synthetic latent task.
+
+Large models train on data (ε-prediction for XL/DDIM, velocity for F3/RF);
+small models are *distilled* from their family's large model (mirroring
+Vega←SDXL and the shared-data SD3.5 pair) — this is what makes the two
+scales' denoising trajectories line up, the property relay inference needs.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.samplers import rf_noise, vp_noise
+from repro.core.schedules import vp_alpha_bar
+from repro.diffusion import synth
+from repro.models import diffusion_nets as dn
+
+SIGMA_MIN, SIGMA_MAX = 0.03, 10.0
+
+
+def _sample_sigma(key, b, low_bias: bool = False):
+    """Log-uniform σ in [σ_min, σ_max].  With ``low_bias`` (distillation),
+    70% of samples come from the low-noise region the device model actually
+    serves after a relay handoff (σ ≤ 1)."""
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (b,))
+    hi = jnp.where(
+        jax.random.uniform(k2, (b,)) < (0.7 if low_bias else 0.0), 1.0, SIGMA_MAX
+    )
+    return jnp.exp(jnp.log(SIGMA_MIN) + u * (jnp.log(hi) - jnp.log(SIGMA_MIN)))
+
+
+def _loss_xl(params, cfg, key, x0, cond):
+    """x̂0-parameterized VP diffusion (ε̂ derived at sampling time — see
+    families.vp_eps_from_x0; ε-prediction is ill-conditioned for x̂0
+    recovery at high σ and underfits at this scale)."""
+    b = x0.shape[0]
+    k1, k2 = jax.random.split(key)
+    sig = _sample_sigma(k1, b)
+    ab = vp_alpha_bar(sig)[:, None, None, None]
+    noise = jax.random.normal(k2, x0.shape)
+    xt = jnp.sqrt(ab) * x0 + jnp.sqrt(1 - ab) * noise
+    pred = dn.apply_net(params, cfg, xt, sig, cond)
+    return jnp.mean(jnp.square(pred - x0))
+
+
+def _loss_f3(params, cfg, key, x0, cond):
+    """x̂0-parameterized rectified flow: the net predicts the clean latent
+    (well-conditioned at every t; raw v-prediction needs 1/t input gain as
+    t→0 and underfits badly at this scale).  The sampler derives
+    v = (x_t − x̂0)/t — the same ODE."""
+    b = x0.shape[0]
+    k1, k2 = jax.random.split(key)
+    t = jax.random.uniform(k1, (b,))
+    noise = jax.random.normal(k2, x0.shape)
+    xt = (1 - t)[:, None, None, None] * x0 + t[:, None, None, None] * noise
+    pred = dn.apply_net(params, cfg, xt, t, cond)
+    return jnp.mean(jnp.square(pred - x0))
+
+
+def _loss_distill(params, cfg, teacher_params, teacher_cfg, family, key, x0, cond):
+    """Student matches the teacher's prediction at sampled noise levels,
+    mixed with a small data-loss term."""
+    b = x0.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    if family == "XL":
+        sig = _sample_sigma(k1, b, low_bias=True)
+        ab = vp_alpha_bar(sig)[:, None, None, None]
+        noise = jax.random.normal(k2, x0.shape)
+        xt = jnp.sqrt(ab) * x0 + jnp.sqrt(1 - ab) * noise
+        tvar = sig
+        data_target = x0  # x̂0 parameterization (see _loss_xl)
+    else:
+        # bias toward the post-handoff region (t ≤ 0.6) the student serves
+        t_lo = jax.random.uniform(k1, (b,)) * 0.6
+        t_full = jax.random.uniform(k1, (b,))
+        t = jnp.where(jax.random.uniform(k3, (b,)) < 0.7, t_lo, t_full)
+        noise = jax.random.normal(k2, x0.shape)
+        xt = (1 - t)[:, None, None, None] * x0 + t[:, None, None, None] * noise
+        tvar = t
+        data_target = x0  # x̂0 parameterization (see _loss_f3)
+    teach = jax.lax.stop_gradient(
+        dn.apply_net(teacher_params, teacher_cfg, xt, tvar, cond)
+    )
+    pred = dn.apply_net(params, cfg, xt, tvar, cond)
+    return 0.8 * jnp.mean(jnp.square(pred - teach)) + 0.2 * jnp.mean(
+        jnp.square(pred - data_target)
+    )
+
+
+def _adam_step(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    params = jax.tree.map(
+        lambda p, mi, vi: p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps),
+        params, m, v,
+    )
+    return params, m, v
+
+
+def train_model(
+    key,
+    family: str,
+    size: str,
+    *,
+    steps: int = 400,
+    batch: int = 128,
+    teacher=None,  # (params, cfg) → distillation mode
+    seed0: int = 0,
+    verbose: bool = False,
+):
+    cfg = __import__("repro.diffusion.families", fromlist=["NET_CONFIGS"]).NET_CONFIGS[
+        (family, size)
+    ]
+    params = dn.init_net(key, cfg)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    if teacher is not None:
+        t_params, t_cfg = teacher
+        loss_fn = partial(_loss_distill, teacher_params=t_params, teacher_cfg=t_cfg,
+                          family=family)
+        loss_fn = lambda p, k, x, c: _loss_distill(p, cfg, t_params, t_cfg, family, k, x, c)
+    elif family == "XL":
+        loss_fn = lambda p, k, x, c: _loss_xl(p, cfg, k, x, c)
+    else:
+        loss_fn = lambda p, k, x, c: _loss_f3(p, cfg, k, x, c)
+
+    base_lr = 3e-3 if cfg.kind == "mmdit" else 1e-3  # conv net needs lower
+
+    @jax.jit
+    def step_fn(params, m, v, key, x0, cond, i):
+        loss, grads = jax.value_and_grad(loss_fn)(params, key, x0, cond)
+        lr = base_lr * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * i / steps)))
+        params, m, v = _adam_step(params, grads, m, v, i, lr)
+        return params, m, v, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(1, steps + 1):
+        seeds = np.arange(seed0 + i * batch, seed0 + (i + 1) * batch)
+        _, x0, cond = synth.batch(seeds, family)
+        key, sub = jax.random.split(key)
+        params, m, v, loss = step_fn(
+            params, m, v, sub, jnp.asarray(x0), jnp.asarray(cond), jnp.float32(i)
+        )
+        losses.append(float(loss))
+        if verbose and i % 100 == 0:
+            print(f"  [{family}/{size}] step {i}: loss {loss:.4f} ({time.time()-t0:.0f}s)")
+    return params, losses
+
+
+def train_family_pair(key, family: str, *, steps_large=400, steps_small=400,
+                      batch=64, verbose=False):
+    k1, k2 = jax.random.split(key)
+    large, ll = train_model(k1, family, "large", steps=steps_large, batch=batch,
+                            verbose=verbose)
+    from repro.diffusion.families import NET_CONFIGS
+
+    small, ls = train_model(
+        k2, family, "small", steps=steps_small, batch=batch,
+        teacher=(large, NET_CONFIGS[(family, "large")]), verbose=verbose,
+    )
+    return large, small, {"loss_large": ll, "loss_small": ls}
+
+
+def finetune_on_trajectories(
+    key,
+    family: str,
+    large_params,
+    small_params,
+    *,
+    steps: int = 400,
+    n_traj: int = 192,
+    batch: int = 128,
+    verbose: bool = False,
+):
+    """Trajectory-matched distillation (beyond-paper alignment): fine-tune
+    the student on states sampled from the *teacher's own sampling
+    trajectories* — exactly the distribution the device model sees after a
+    relay handoff — matching the teacher's prediction at each state.
+    Tightens the Fig. 2 ρ_t deviation beyond plain forward-noising distill.
+    """
+    from repro.core import samplers
+    from repro.diffusion.families import NET_CONFIGS, SPECS
+
+    spec = SPECS[family]()
+    lcfg = NET_CONFIGS[(family, "large")]
+    scfg = NET_CONFIGS[(family, "small")]
+    from repro.diffusion.families import rf_velocity_from_x0, vp_eps_from_x0
+
+    if spec.kind == "rf":
+        large_fn = lambda p, x, t, c: rf_velocity_from_x0(
+            dn.apply_net(p, lcfg, x, t, c), x, t
+        )
+    else:
+        large_fn = lambda p, x, t, c: vp_eps_from_x0(
+            dn.apply_net(p, lcfg, x, t, c), x, t
+        )
+
+    # 1) build a pool of (x_t, t, cond) states from teacher trajectories
+    k1, k2 = jax.random.split(key)
+    seeds = np.arange(500_000, 500_000 + n_traj)
+    _, _, cond = synth.batch(seeds, family)
+    cond = jnp.asarray(cond)
+    xT = jax.random.normal(k1, (n_traj,) + spec.latent_shape)
+    sampler = samplers.rf_euler_sample if spec.kind == "rf" else samplers.ddim_sample
+    _, traj = sampler(large_fn, large_params, xT, spec.sigmas_edge, cond)
+    # traj: (T, n_traj, ...) states AFTER each step i → noise level sigmas[i+1]
+    sig_pool = np.asarray(spec.sigmas_edge)[1:-1]  # drop final σ=0 state
+    states = np.asarray(traj[:-1])  # (T-1, n_traj, ...)
+    n_lvls = states.shape[0]
+
+    # 2) fine-tune the student to match the teacher on pool states
+    params = small_params
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, x, t, c):
+        teach = jax.lax.stop_gradient(dn.apply_net(large_params, lcfg, x, t, c))
+        return jnp.mean(jnp.square(dn.apply_net(p, scfg, x, t, c) - teach))
+
+    @jax.jit
+    def step_fn(params, m, v, x, t, c, i):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, t, c)
+        lr = 5e-4 * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * i / steps)))
+        params, m, v = _adam_step(params, g, m, v, i, lr)
+        return params, m, v, loss
+
+    rng = np.random.default_rng(0)
+    for i in range(1, steps + 1):
+        li = rng.integers(0, n_lvls, size=batch)
+        ti = rng.integers(0, n_traj, size=batch)
+        x = jnp.asarray(states[li, ti])
+        t = jnp.asarray(sig_pool[li])
+        c = cond[ti]
+        params, m, v, loss = step_fn(params, m, v, x, t, c, jnp.float32(i))
+        if verbose and i % 100 == 0:
+            print(f"  [traj-distill {family}] step {i}: loss {float(loss):.5f}")
+    return params
+
+
+def get_or_train_families(
+    ckpt_dir="results/ckpts", *, steps=400, batch=64, verbose=False, families=("XL", "F3")
+):
+    """Train (or load cached) relay families — shared by benchmarks/examples."""
+    from pathlib import Path
+
+    from repro.diffusion.families import make_family
+    from repro.training import checkpoint as ckpt
+
+    out = {}
+    for i, fam in enumerate(families):
+        path = Path(ckpt_dir) / f"diffusion_{fam}.ckpt"
+        if path.exists():
+            key = jax.random.PRNGKey(100 + i)
+            large0 = dn.init_net(key, __import__(
+                "repro.diffusion.families", fromlist=["NET_CONFIGS"]
+            ).NET_CONFIGS[(fam, "large")])
+            small0 = dn.init_net(key, __import__(
+                "repro.diffusion.families", fromlist=["NET_CONFIGS"]
+            ).NET_CONFIGS[(fam, "small")])
+            tree, _ = ckpt.restore(path, {"large": large0, "small": small0})
+            out[fam] = make_family(fam, tree["large"], tree["small"])
+            continue
+        if verbose:
+            print(f"training family {fam} ({steps} steps each)...")
+        large, small, _ = train_family_pair(
+            jax.random.PRNGKey(100 + i), fam,
+            steps_large=steps, steps_small=steps, batch=batch, verbose=verbose,
+        )
+        # final alignment stage: trajectory-matched distillation (tightens
+        # the Fig. 2 ρ_t deviation — see EXPERIMENTS.md)
+        if steps >= 300:
+            small = finetune_on_trajectories(
+                jax.random.PRNGKey(200 + i), fam, large, small,
+                steps=min(350, steps), verbose=verbose,
+            )
+        ckpt.save(path, {"large": large, "small": small})
+        out[fam] = make_family(fam, large, small)
+    return out

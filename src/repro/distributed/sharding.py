@@ -1,0 +1,183 @@
+"""Logical sharding rules: param/cache/activation PartitionSpecs.
+
+Rules are keyed by the parameter's leaf name and expressed as an *ordered
+candidate list*; the first candidate whose every sharded dimension divides
+evenly is used, otherwise the leaf is replicated.  This gives per-arch
+adaptivity for free — e.g. llama4's 40 query heads don't divide the 16-way
+model axis, so its attention weights fall through to head_dim sharding;
+recurrentgemma's single KV head falls through the same way.
+
+A leading stacked ``n_repeats`` axis (scan-over-layers) is detected by rank
+mismatch and left unsharded.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# "B" placeholder is replaced by the mesh's batch axes ("pod","data") / ("data",)
+_B = "B"
+
+# name → ordered candidates; each candidate is a tuple over dims
+PARAM_RULES = {
+    "embed": [("model", None)],
+    "lm_head": [(None, "model")],
+    "wq": [(None, "model", None), (None, None, "model")],
+    "wk": [(None, "model", None), (None, None, "model")],
+    "wv": [(None, "model", None), (None, None, "model")],
+    "wo": [("model", None, None), (None, "model", None)],
+    "w_gate": [(None, "model")],
+    "w_up": [(None, "model")],
+    "w_down": [("model", None)],
+    "router": [(None, None)],
+    "we_gate": [("model", None, None)],
+    "we_up": [("model", None, None)],
+    "we_down": [("model", None, None)],
+    # MLA
+    "w_dq": [(None, "model")],
+    "w_uq": [(None, "model", None), (None, None, "model")],
+    "w_dkv": [(None, None)],  # small; avoids resharding at the latent split
+    "w_uk": [(None, "model", None)],
+    "w_uv": [(None, "model", None)],
+    # recurrent
+    "w_x": [(None, "model")],
+    "w_g": [(None, "model")],
+    "conv_w": [(None, "model")],
+    "conv_b": [("model",)],
+    "w_a": [(None, "model")],
+    "b_a": [("model",)],
+    "w_i": [(None, "model")],
+    "b_i": [("model",)],
+    "lam": [("model",)],
+    "w_out": [("model", None)],
+    "w_if": [(None, None)],
+    "b_if": [(None,)],
+    # mLSTM block-diagonal per-head projections: shard the output dim
+    "wq_h": [(None, None, "model")],
+    "wk_h": [(None, None, "model")],
+    "wv_h": [(None, None, "model")],
+    "gn_scale": [("model",)],
+    # sLSTM stays local to each shard (sequential scan) → replicated
+    "w_gates": [(None, None)],
+    "r_gates": [(None, None, None, None)],
+    "b_gates": [(None,)],
+    "ctx_proj": [(None, None)],
+    "mtp_proj": [(None, "model")],
+}
+
+CACHE_RULES = {
+    "k": [(_B, None, "model", None), (_B, "model", None, None), (None, "model", None, None)],
+    "v": [(_B, None, "model", None), (_B, "model", None, None), (None, "model", None, None)],
+    "c_kv": [(_B, None, "model"), (_B, "model", None), (None, "model", None)],
+    "k_rope": [(_B, None, None)],
+    "h": [(_B, "model"), (_B, None, "model"), (None, "model")],
+    "conv": [(_B, None, "model")],
+    "C": [(_B, None, "model", None), (None, None, "model", None)],
+    "n": [(_B, None, "model"), (None, None, "model")],
+    "m": [(_B, None), (None, None)],
+    "c": [(_B, None, "model"), (None, None, "model")],
+}
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _fits(mesh: Mesh, cand: Sequence, shape: Tuple[int, ...]) -> bool:
+    if len(cand) != len(shape):
+        return False
+    return all(d % _axis_size(mesh, ax) == 0 for d, ax in zip(shape, cand))
+
+
+def _resolve(mesh: Mesh, cands, shape, name: str) -> P:
+    ba = batch_axes(mesh)
+    for cand in cands:
+        cand = tuple(ba if ax == _B else ax for ax in cand)
+        # stacked scan axis → prepend None
+        if len(cand) == len(shape) - 1:
+            cand = (None,) + cand
+        if _fits(mesh, cand, shape):
+            return P(*cand)
+    return P()  # replicate
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def param_pspecs(params, mesh: Mesh):
+    """Tree of PartitionSpec matching a parameter tree (or its eval_shape)."""
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name in PARAM_RULES:
+            return _resolve(mesh, PARAM_RULES[name], leaf.shape, name)
+        if "norm" in name or leaf.ndim <= 1:
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cache_pspecs(cache, mesh: Mesh, *, prefer_seq: bool = False):
+    """``prefer_seq``: shard the cache's sequence axis on "model" instead of
+    heads/latent — flash-decoding-style layout: each chip scans its local KV
+    chunk and the softmax combine reduces tiny (B,H) vectors instead of
+    all-reducing full score rows (deepseek decode §Perf iteration)."""
+    seq_first = {
+        "k": [(_B, "model", None, None), (_B, None, "model", None)],
+        "v": [(_B, "model", None, None), (_B, None, "model", None)],
+        "c_kv": [(_B, "model", None), (_B, None, "model")],
+        "k_rope": [(_B, "model", None), (_B, None, None)],
+    }
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if prefer_seq and name in seq_first:
+            return _resolve(mesh, seq_first[name], leaf.shape, name)
+        if name in CACHE_RULES:
+            return _resolve(mesh, CACHE_RULES[name], leaf.shape, name)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def zero_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh, axis: str = "data") -> P:
+    """ZeRO-1: additionally shard one unsharded dim of an optimizer-state
+    leaf along the data axis (first dim that divides evenly)."""
+    if axis not in mesh.shape:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (d, ax) in enumerate(zip(shape, parts)):
+        if ax is None and d % mesh.shape[axis] == 0 and d >= mesh.shape[axis]:
+            parts[i] = axis
+            return P(*parts)
+    return spec
+
+
+def data_pspec(mesh: Mesh, ndim: int) -> P:
+    """Batch-sharded activation spec: (B, ...) → P(batch_axes, None, ...)."""
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,51 @@
+"""Jit'd public wrapper: shape padding + layout handling + CPU fallback
+(interpret mode) for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KV, T, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    s, t = q.shape[2], k.shape[2]
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, t))
+    qp, _ = _pad_to(q, 2, bq)
+    kp, _ = _pad_to(k, 2, bk)
+    vp, _ = _pad_to(v, 2, bk)
+    # padded queries are garbage rows sliced off below; padded keys are
+    # masked in-kernel via kv_len.
+    out = flash_attention_fwd(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=interpret, kv_len=t,
+    )
+    return out[:, :, :s, :]

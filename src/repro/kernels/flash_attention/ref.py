@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal +
+sliding-window + logit softcap)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KV, T, D)
+    v: jnp.ndarray,  # (B, KV, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    qg = q.reshape(b, kv, group, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    t = k.shape[2]
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fused_sampler.ops import fused_cfg_step  # noqa: F401

@@ -1,0 +1,46 @@
+"""Jit'd wrapper: flattens latents, pads, dispatches the fused kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sampler.kernel import fused_cfg_step_fwd
+
+
+@partial(
+    jax.jit,
+    static_argnames=("guidance", "c1", "c2", "mode", "block_n", "interpret"),
+)
+def fused_cfg_step(
+    x: jnp.ndarray,  # any shape (latent batch)
+    eps_c: jnp.ndarray,
+    eps_u: jnp.ndarray,
+    *,
+    guidance: float = 1.0,
+    c1: float = 1.0,
+    c2: float = 0.0,
+    mode: str = "ddim",
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    shape = x.shape
+    last = shape[-1]
+    xf = x.reshape(-1, last)
+    n = xf.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        z = jnp.zeros((pad, last), x.dtype)
+        xf = jnp.concatenate([xf, z])
+        eps_c = jnp.concatenate([eps_c.reshape(-1, last), z])
+        eps_u = jnp.concatenate([eps_u.reshape(-1, last), z])
+    else:
+        eps_c = eps_c.reshape(-1, last)
+        eps_u = eps_u.reshape(-1, last)
+    out = fused_cfg_step_fwd(
+        xf, eps_c, eps_u, guidance=guidance, c1=c1, c2=c2, mode=mode,
+        block_n=bn, interpret=interpret,
+    )
+    return out[:n].reshape(shape)

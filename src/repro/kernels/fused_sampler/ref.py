@@ -1,0 +1,25 @@
+"""Oracle for the fused CFG + sampler-step kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_cfg_step_ref(x, eps_c, eps_u, *, guidance, mode, c1, c2):
+    """mode "ddim": x' = c1·x̂0 + c2·ε̂  with x̂0 = (x − c2p·ε̂)/c1p packed as
+    (c1, c2) = (√ᾱ_s/√ᾱ_t, √(1−ᾱ_s) − √ᾱ_s·√(1−ᾱ_t)/√ᾱ_t) — i.e. the DDIM
+    update collapses to x' = c1·x + c2·ε̂ (affine in x and ε̂).
+    mode "rf":   x' = x + c1·v̂   (c2 unused).
+    """
+    eps = eps_u + guidance * (eps_c - eps_u)
+    if mode == "ddim":
+        return c1 * x + c2 * eps
+    return x + c1 * eps
+
+
+def ddim_coeffs(ab_t, ab_s):
+    """Affine DDIM coefficients: x' = c1·x + c2·ε̂."""
+    import numpy as np
+
+    c1 = np.sqrt(ab_s / ab_t)
+    c2 = np.sqrt(1 - ab_s) - np.sqrt(ab_s) * np.sqrt(1 - ab_t) / np.sqrt(ab_t)
+    return float(c1), float(c2)

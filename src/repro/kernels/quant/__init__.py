@@ -1,0 +1,1 @@
+from repro.kernels.quant.ops import quant_int8, dequant_int8  # noqa: F401

@@ -1,0 +1,39 @@
+"""Jit'd wrappers for the int8 quant/dequant kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import dequant_int8_fwd, quant_int8_fwd
+
+
+@partial(jax.jit, static_argnames=("block_r", "interpret"))
+def quant_int8(x: jnp.ndarray, *, block_r: int = 256, interpret: bool = False):
+    """Row-wise symmetric int8: returns (q int8, scale fp32 per row)."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    r = xf.shape[0]
+    br = min(block_r, r)
+    pad = (-r) % br
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    q, s = quant_int8_fwd(xf, block_r=br, interpret=interpret)
+    return q[:r].reshape(shape), s[:r].reshape(shape[:-1] + (1,))
+
+
+@partial(jax.jit, static_argnames=("block_r", "interpret"))
+def dequant_int8(q: jnp.ndarray, scale: jnp.ndarray, *, block_r: int = 256,
+                 interpret: bool = False):
+    shape = q.shape
+    qf = q.reshape(-1, shape[-1])
+    sf = scale.reshape(-1, 1)
+    r = qf.shape[0]
+    br = min(block_r, r)
+    pad = (-r) % br
+    if pad:
+        qf = jnp.pad(qf, ((0, pad), (0, 0)))
+        sf = jnp.pad(sf, ((0, pad), (0, 0)))
+    out = dequant_int8_fwd(qf, sf, block_r=br, interpret=interpret)
+    return out[:r].reshape(shape)

@@ -1,0 +1,16 @@
+"""Oracle for row-wise int8 quantization (mirrors distributed/compression.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_int8_ref(x: jnp.ndarray):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_int8_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,66 @@
+"""Pallas TPU RG-LRU linear-recurrence kernel.
+
+TPU adaptation of Griffin's CUDA scan: the channel axis (lanes) is embar-
+rassingly parallel and MXU-free (pure VPU), so we tile (batch × channel)
+across the grid and keep the *sequence* as the minor-most sequential grid
+dimension, carrying the recurrence state h in VMEM scratch between sequence
+blocks.  Inside a block the recurrence is a short unrolled fori_loop over
+time — each step is an elementwise FMA over a (block_r,) vector register row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        at = a_ref[0, t]
+        bt = b_ref[0, t]
+        h = at * h + bt
+        o_ref[0, t] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+
+
+def rglru_scan_fwd(
+    a: jnp.ndarray,  # (B, S, R) fp32 decay gates
+    b: jnp.ndarray,  # (B, S, R) fp32 gated inputs
+    *,
+    block_s: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, s, r = a.shape
+    block_s = min(block_s, s)
+    block_r = min(block_r, r)
+    assert s % block_s == 0 and r % block_r == 0
+    grid = (bsz, r // block_r, s // block_s)
+
+    def idx(bi, ri, si):
+        return (bi, si, ri)
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_r), idx),
+            pl.BlockSpec((1, block_s, block_r), idx),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_r), idx),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, r), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

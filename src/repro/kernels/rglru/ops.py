@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the RG-LRU scan kernel (padding + dtype management)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_r", "interpret"))
+def rglru_scan(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_s: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """h_t = a_t⊙h_{t-1} + b_t over axis 1.  a,b: (B,S,R)."""
+    bsz, s, r = a.shape
+    bs = min(block_s, s)
+    br = min(block_r, r)
+    pad_s = (-s) % bs
+    pad_r = (-r) % br
+    if pad_s or pad_r:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_r)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_r)))
+    out = rglru_scan_fwd(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        block_s=bs, block_r=br, interpret=interpret,
+    )
+    return out[:, :s, :r]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence kernel:
+h_t = a_t ⊙ h_{t-1} + b_t  along the sequence axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0=None) -> jnp.ndarray:
+    """a, b: (B, S, R) fp32; h0: (B, R) initial state. Returns h: (B, S, R)."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

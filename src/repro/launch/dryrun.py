@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (tests may shrink the placeholder device count — AFTER the mandated lines)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=" + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell
+against the production mesh, print memory/cost analysis, and derive the
+roofline terms.  Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep both --out results/dryrun.json
+Variants (perf iterations): --ce-chunk N --no-remat --mla-absorb
+  --opt-state {fp32,bf16,int8} --accum N --mlstm-chunk N --tag NAME
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def build_cell(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.analysis import roofline
+    from repro.analysis.params import active_params, total_params
+    from repro.configs.base import SHAPES, applicable_shapes
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_dev_mesh, make_production_mesh
+    from repro.training import train_step as ts
+    from repro.training.optimizer import OptConfig
+
+    cfg = configs.get_config(args.arch)
+    if args.mla_absorb and cfg.mla is not None:
+        cfg = cfg.replace(mla=dataclasses.replace(cfg.mla, absorb=True))
+    if args.pad_heads:
+        cfg = cfg.replace(attn_head_padding=True)
+    shape = SHAPES[args.shape]
+    if shape not in applicable_shapes(cfg):
+        return {"skipped": True, "reason": "shape not applicable (see DESIGN.md)"}
+
+    if args.mini:
+        mesh = make_dev_mesh(2, 4, multi_pod=(args.mesh == "multi"))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    n_chips = mesh.size
+
+    state_dtype = args.opt_state or (
+        "int8" if total_params(cfg) > 100e9 else "fp32"
+    )
+    opt_cfg = OptConfig(state_dtype=state_dtype)
+
+    t0 = time.time()
+    params_sds, pspecs = sp.param_specs(cfg, mesh)
+
+    if shape.kind == "train":
+        opt_sds, _ = sp.opt_specs(cfg, mesh, opt_cfg, params_sds, pspecs)
+        batch_sds = sp.batch_specs(cfg, shape, mesh, with_labels=True)
+        fn = ts.make_train_step(
+            cfg, opt_cfg, mesh=mesh, remat=not args.no_remat,
+            mlstm_chunk=args.mlstm_chunk, ce_chunk=args.ce_chunk,
+            accum_steps=args.accum,
+        )
+        jitted = jax.jit(fn, donate_argnums=(0, 1))
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        batch_sds = sp.batch_specs(cfg, shape, mesh, with_labels=False)
+        fn = ts.make_prefill_step(cfg, mesh=mesh, mlstm_chunk=args.mlstm_chunk)
+        lowered = jax.jit(fn).lower(params_sds, batch_sds)
+    else:  # decode
+        cache_sds, _ = sp.cache_specs(cfg, shape, mesh, prefer_seq=args.cache_seq)
+        token, pos, ctx = sp.decode_input_specs(cfg, shape, mesh)
+        fn = ts.make_serve_step(cfg, mesh=mesh)
+        jitted = jax.jit(fn, donate_argnums=(1,), static_argnames=())
+        if ctx is not None:
+            lowered = jitted.lower(params_sds, cache_sds, token, pos, ctx)
+        else:
+            lowered = jitted.lower(params_sds, cache_sds, token, pos)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(mem)    # proves it fits
+    print({k: v for k, v in cost.items() if "flops" in k or k == "bytes accessed"})
+
+    mf = roofline.model_flops_estimate(cfg, shape)
+    ana = roofline.analyze(compiled.as_text(), cost, n_chips, model_flops=mf)
+
+    rec = {
+        "arch": args.arch,
+        "shape": args.shape,
+        "mesh": args.mesh,
+        "mini": bool(args.mini),
+        "tag": args.tag,
+        "n_chips": n_chips,
+        "total_params": total_params(cfg),
+        "active_params": active_params(cfg),
+        "opt_state_dtype": state_dtype if shape.kind == "train" else None,
+        "variant": {
+            "ce_chunk": args.ce_chunk, "remat": not args.no_remat,
+            "accum": args.accum, "mla_absorb": args.mla_absorb,
+            "mlstm_chunk": args.mlstm_chunk, "pad_heads": args.pad_heads,
+        },
+        "per_device_bytes": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "peak_estimate": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **ana,
+    }
+    return rec
+
+
+def cell_id(arch, shape, mesh, tag=""):
+    return f"{arch}|{shape}|{mesh}" + (f"|{tag}" if tag else "")
+
+
+def run_sweep(args):
+    from repro import configs
+    from repro.configs.base import applicable_shapes
+
+    meshes = ["single", "multi"] if args.sweep == "both" else [args.sweep]
+    archs = args.arch.split(",") if args.arch else configs.list_archs()
+    out = Path(args.out)
+    results = json.loads(out.read_text()) if out.exists() else {}
+
+    cells = []
+    for mesh in meshes:
+        for arch in archs:
+            cfg = configs.get_config(arch)
+            for shape in applicable_shapes(cfg):
+                cells.append((arch, shape.name, mesh))
+    print(f"sweep: {len(cells)} cells")
+
+    for arch, shape, mesh in cells:
+        cid = cell_id(arch, shape, mesh, args.tag)
+        if cid in results and not args.force:
+            print(f"skip {cid} (cached)")
+            continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh,
+            "--out", str(out), "--tag", args.tag,
+        ]
+        for flag in ("ce_chunk", "accum", "mlstm_chunk"):
+            v = getattr(args, flag)
+            if v:
+                cmd += [f"--{flag.replace('_','-')}", str(v)]
+        if args.no_remat:
+            cmd += ["--no-remat"]
+        if args.mla_absorb:
+            cmd += ["--mla-absorb"]
+        if args.mini:
+            cmd += ["--mini"]
+        print(f"== {cid}", flush=True)
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=args.timeout)
+        if r.returncode != 0:
+            print(f"FAIL {cid} ({time.time()-t0:.0f}s): {r.stderr[-2000:]}", flush=True)
+            results = json.loads(out.read_text()) if out.exists() else results
+            results[cid] = {"error": r.stderr[-2000:], "arch": arch,
+                            "shape": shape, "mesh": mesh}
+            out.write_text(json.dumps(results, indent=1))
+        else:
+            print(f"ok   {cid} ({time.time()-t0:.0f}s)", flush=True)
+            results = json.loads(out.read_text())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--sweep", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mini", action="store_true", help="tiny dev mesh (tests)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    # perf-variant knobs
+    ap.add_argument("--ce-chunk", dest="ce_chunk", type=int, default=0)
+    ap.add_argument("--no-remat", dest="no_remat", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mla-absorb", dest="mla_absorb", action="store_true")
+    ap.add_argument("--pad-heads", dest="pad_heads", action="store_true")
+    ap.add_argument("--cache-seq", dest="cache_seq", action="store_true")
+    ap.add_argument("--mlstm-chunk", dest="mlstm_chunk", type=int, default=0)
+    ap.add_argument("--opt-state", dest="opt_state", choices=["fp32", "bf16", "int8"])
+    args = ap.parse_args()
+    args.mlstm_chunk = args.mlstm_chunk or None
+    args.ce_chunk = args.ce_chunk or None
+
+    if args.sweep:
+        run_sweep(args)
+        return
+
+    rec = build_cell(args)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    results = json.loads(out.read_text()) if out.exists() else {}
+    results[cell_id(args.arch, args.shape, args.mesh, args.tag)] = rec
+    out.write_text(json.dumps(results, indent=1))
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

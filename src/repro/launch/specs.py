@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins for every model input, with shardings attached —
+the dry-run lowers against these (no device allocation ever happens).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.models import transformer as tr
+from repro.training import optimizer as opt
+
+
+def _sds(shape, dtype, mesh, spec):
+    # divisibility fallback: un-shard any dim the mesh axes don't divide
+    # (e.g. global_batch=1 for long_500k decode)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for d, ax in zip(shape, parts):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        fixed.append(ax if d % size == 0 else None)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, P(*fixed)))
+
+
+def _attach(tree_shapes, tree_specs, mesh):
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, mesh, p), tree_shapes, tree_specs
+    )
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *, with_labels: bool):
+    """Token/ctx/label ShapeDtypeStructs for a training or prefill step."""
+    ba = sh.batch_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32, mesh, P(ba, None))}
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32, mesh, P(ba, None))
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        out["ctx"] = _sds((b, e.n_frames, e.d_model), jnp.bfloat16, mesh, P(ba, None, None))
+    elif cfg.ctx_dim:
+        out["ctx"] = _sds((b, cfg.ctx_len, cfg.ctx_dim), jnp.bfloat16, mesh, P(ba, None, None))
+    return out
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh):
+    shapes = jax.eval_shape(lambda k: tr.init_model(k, cfg), jax.random.key(0))
+    pspecs = sh.param_pspecs(shapes, mesh)
+    return _attach(shapes, pspecs, mesh), pspecs
+
+
+def opt_specs(cfg: ArchConfig, mesh: Mesh, opt_cfg: opt.OptConfig, param_shapes, pspecs):
+    """Optimizer-state SDS with ZeRO-1 data-axis sharding on m/v."""
+    state_shapes = jax.eval_shape(partial(opt.adamw_init, c=opt_cfg), param_shapes)
+    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+    def mv_specs(shapes_tree):
+        flat_p, _ = jax.tree_util.tree_flatten_with_path(
+            pspecs, is_leaf=lambda x: isinstance(x, P)
+        )
+        flat_s, tdef = jax.tree.flatten(shapes_tree, is_leaf=is_q)
+        out = []
+        for (path, spec), leaf in zip(flat_p, flat_s):
+            if is_q(leaf):
+                qspec = sh.zero_pspec(spec, leaf["q"].shape, mesh)
+                sparts = list(qspec)[: leaf["s"].ndim - 1] + [None]
+                sparts += [None] * (leaf["s"].ndim - len(sparts))
+                # scale rows follow the q rows; trailing size-1 dim replicated
+                out.append({"q": qspec, "s": P(*sparts)})
+            else:
+                out.append(sh.zero_pspec(spec, leaf.shape, mesh))
+        return jax.tree.unflatten(tdef, out)
+
+    specs = {
+        "m": mv_specs(state_shapes["m"]),
+        "v": mv_specs(state_shapes["v"]),
+        "count": P(),
+    }
+    return _attach(state_shapes, specs, mesh), specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                *, prefer_seq: bool = False):
+    b, s = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: tr.init_model_cache(cfg, b, s))
+    cspecs = sh.cache_pspecs(shapes, mesh, prefer_seq=prefer_seq)
+    return _attach(shapes, cspecs, mesh), cspecs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    ba = sh.batch_axes(mesh)
+    b = shape.global_batch
+    token = _sds((b, 1), jnp.int32, mesh, P(ba, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    ctx = None
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        ctx = _sds((b, e.n_frames, e.d_model), jnp.bfloat16, mesh, P(ba, None, None))
+    elif cfg.ctx_dim:
+        ctx = _sds((b, cfg.ctx_len, cfg.ctx_dim), jnp.bfloat16, mesh, P(ba, None, None))
+    return token, pos, ctx

@@ -1,0 +1,6 @@
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    init_model,
+    init_model_cache,
+    model_fwd,
+)

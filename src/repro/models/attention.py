@@ -1,0 +1,308 @@
+"""Attention variants: GQA (window / softcap / qk_norm), cross-attention,
+and DeepSeek-style MLA (multi-head latent attention) with optional decode-time
+weight absorption."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.configs.base import ArchConfig, MLAConfig
+
+Array = jax.Array
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (fits f32)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # cross-attn keys/values read the ctx AFTER the top-level ctx_proj → d_model
+    kv_in = cfg.d_model
+    p = {
+        "wq": cm.dense_init(ks[0], cfg.d_model, (cfg.n_heads, cfg.head_dim), dt),
+        "wk": cm.dense_init(ks[1], kv_in, (cfg.n_kv_heads, cfg.head_dim), dt),
+        "wv": cm.dense_init(ks[2], kv_in, (cfg.n_kv_heads, cfg.head_dim), dt),
+        "wo": cm.dense_init(
+            ks[3], cfg.n_heads * cfg.head_dim, (cfg.d_model,), dt
+        ).reshape(cfg.n_heads, cfg.head_dim, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dt)
+    return p
+
+
+def pad_heads_grouped(wq: Array, wo: Array, n_kv: int, pad_to: int):
+    """Zero-pad query heads **inside each KV group** so the (kv, group)
+    reshape mapping of real heads is unchanged: each group of g real heads
+    becomes g+p heads whose extra rows are zero in wq (uniform-attention
+    garbage) and zero in wo (so they contribute nothing to the output)."""
+    d, h, hd = wq.shape
+    group = h // n_kv
+    new_group = pad_to // n_kv
+    pad = new_group - group
+    wq_g = wq.reshape(d, n_kv, group, hd)
+    wq_p = jnp.pad(wq_g, ((0, 0), (0, 0), (0, pad), (0, 0))).reshape(d, pad_to, hd)
+    wo_g = wo.reshape(n_kv, group, hd, -1)
+    wo_p = jnp.pad(wo_g, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(pad_to, hd, -1)
+    return wq_p, wo_p
+
+
+def _sdpa(q, k, v, mask, softcap_val: Optional[float]) -> Array:
+    """q: (B,S,H,hd) k/v: (B,T,KV,hd), mask: (B|1, S, T) bool → (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, hd)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap_val is not None:
+        scores = cm.softcap(scores, softcap_val)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def gqa_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    *,
+    window: Optional[int] = None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    ctx: Optional[Array] = None,
+    causal: bool = True,
+    mesh=None,
+):
+    """Full-sequence (causal) or single-step (cache) GQA attention.
+
+    Returns (out, new_cache).  ``cache`` holds {"k","v"} of shape
+    (B, max_len, KV, hd); ``cache_pos`` is the scalar write index.
+    For cross-attention pass ``ctx`` (keys/values source, no mask/cache).
+    """
+    b, s, _ = x.shape
+    wq, wo = p["wq"], p["wo"]
+    head_constraint = None
+    if (
+        cfg.attn_head_padding
+        and mesh is not None
+        and "model" in mesh.shape
+        and cfg.n_heads % mesh.shape["model"] != 0
+    ):
+        tp = mesh.shape["model"]
+        # smallest count ≥ n_heads divisible by both tp (shardable) and
+        # n_kv_heads (preserves the (kv, group) reshape of real heads)
+        pad_to = tp * (-(-cfg.n_heads // tp))
+        while pad_to % cfg.n_kv_heads or pad_to % tp:
+            pad_to += 1
+        wq, wo = pad_heads_grouped(wq, wo, cfg.n_kv_heads, pad_to)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import batch_axes
+
+        head_constraint = NamedSharding(
+            mesh, P(batch_axes(mesh), None, "model", None)
+        )
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    if head_constraint is not None:
+        q = jax.lax.with_sharding_constraint(q, head_constraint)
+    kv_src = ctx if ctx is not None else x
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    if head_constraint is not None:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import batch_axes
+
+        kv_spec = NamedSharding(  # replicate KV heads across the model axis
+            mesh, P(batch_axes(mesh), None, None, None)
+        )
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = cm.rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if ctx is None:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if ctx is not None:
+        # cross-attention: attend over all ctx tokens, no causal mask
+        t = kv_src.shape[1]
+        mask = jnp.ones((1, s, t), bool)
+        out = _sdpa(q, k, v, mask, cfg.attn_softcap)
+    elif cache is None:
+        # full-sequence (training / prefill)
+        if not causal:
+            m = jnp.ones((s, s), bool)
+        elif window:
+            m = cm.window_mask(s, s, 0, window)
+        else:
+            m = cm.causal_mask(s, s, 0)
+        out = _sdpa(q, k, v, m[None], cfg.attn_softcap)
+    elif window and cache["k"].shape[1] <= window:
+        # ring-buffer decode for sliding-window layers: cache holds the last
+        # `window` tokens; slot = pos mod W.  RoPE was applied with absolute
+        # positions at write time, and softmax is order-invariant, so slot
+        # order does not matter — only the validity mask does.
+        w = cache["k"].shape[1]
+        slot = jax.lax.rem(cache_pos, w)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        slots = jnp.arange(w)
+        slot_pos = cache_pos - jax.lax.rem(cache_pos - slots, w)  # abs position
+        valid = (slot_pos >= 0) & (slot_pos <= cache_pos) & (
+            slot_pos > cache_pos - window
+        )
+        m = jnp.broadcast_to(valid[None, None, :], (1, s, w))
+        out = _sdpa(q, kc, vc, m, cfg.attn_softcap)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # decode: write new k/v at cache_pos, attend over cache[0..cache_pos]
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=1)
+        t = kc.shape[1]
+        if window:
+            m = cm.window_mask(s, t, cache_pos, window)
+        else:
+            m = cm.causal_mask(s, t, cache_pos)
+        out = _sdpa(q, kc, vc, m[None], cfg.attn_softcap)
+        new_cache = {"k": kc, "v": vc}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, new_cache
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int, window=None):
+    dt = cm.dtype_of(cfg)
+    length = min(max_len, window) if window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": cm.dense_init(ks[0], cfg.d_model, (m.q_lora_rank,), dt),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dt),
+        "w_uq": cm.dense_init(ks[1], m.q_lora_rank, (cfg.n_heads, qk_dim), dt),
+        "w_dkv": cm.dense_init(
+            ks[2], cfg.d_model, (m.kv_lora_rank + m.qk_rope_dim,), dt
+        ),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dt),
+        "w_uk": cm.dense_init(ks[3], m.kv_lora_rank, (cfg.n_heads, m.qk_nope_dim), dt),
+        "w_uv": cm.dense_init(ks[4], m.kv_lora_rank, (cfg.n_heads, m.v_head_dim), dt),
+        "wo": cm.dense_init(ks[5], cfg.n_heads * m.v_head_dim, (cfg.d_model,), dt)
+        .reshape(cfg.n_heads, m.v_head_dim, cfg.d_model),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    m: MLAConfig = cfg.mla
+    cq = cm.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = cm.rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # shared head
+    k_rope = cm.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    *,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+):
+    """MLA attention.  Cache stores the *compressed* latents: {"c_kv","k_rope"}.
+
+    Two decode paths: expand (baseline — reconstitute per-head K/V from the
+    latent) and absorb (cfg.mla.absorb — fold W_uk/W_uv into the query/output,
+    attending directly over the rank-512 latent: DeepSeek's serving trick)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+
+    new_cache = cache
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, cache_pos, 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, cache_pos, 1
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        mask = cm.causal_mask(s, c_kv.shape[1], cache_pos)[None]
+    else:
+        mask = cm.causal_mask(s, s, 0)[None]
+
+    if m.absorb:
+        # fold W_uk into q, attend over the latent itself
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])  # (B,S,H,rank)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
+            + jnp.einsum(
+                "bshk,btk->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+            )
+        ) * scale
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhk->bshk", out_lat.astype(x.dtype), p["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+        vv = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+        scores = (
+            jnp.einsum(
+                "bshk,bthk->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+            )
+            + jnp.einsum(
+                "bshk,btk->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+            )
+        ) * scale
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", probs, vv.astype(jnp.float32)).astype(x.dtype)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int):
+    m: MLAConfig = cfg.mla
+    dt = cm.dtype_of(cfg)
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dt),
+    }

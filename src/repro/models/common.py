@@ -1,0 +1,103 @@
+"""Shared model building blocks (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> Array:
+    """Truncated-normal fan-in init, matmul weight of shape (in_dim, *out)."""
+    shape = (in_dim,) + tuple(np.atleast_1d(out_shape).tolist())
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> Array:
+    """Boolean (q_len, kv_len) mask, True = attend.  q_offset is the absolute
+    position of query row 0 (may be a traced scalar)."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def window_mask(q_len: int, kv_len: int, q_offset, window: int) -> Array:
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return (kv_pos <= q_pos) & (kv_pos > q_pos - window)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

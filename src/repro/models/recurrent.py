@@ -1,0 +1,378 @@
+"""Recurrent mixers: Griffin RG-LRU (recurrentgemma) and xLSTM cells
+(mLSTM parallel/chunkwise + recurrent decode, sLSTM sequential scan).
+
+All recurrences run in fp32 internally; block I/O is cfg.dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width cw) with optional streaming cache
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: Array, w: Array, b: Array, cache: Optional[Array] = None):
+    """x: (B,S,R); w: (cw,R); cache: (B,cw-1,R) trailing inputs from the past.
+    Returns (y, new_cache)."""
+    cw = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+cw-1, R)
+    y = sum(w[i] * xp[:, i : i + x.shape[1]] for i in range(cw)) + b
+    new_cache = xp[:, -(cw - 1) :] if cw > 1 else pad
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ArchConfig) -> dict:
+    dt = cm.dtype_of(cfg)
+    r = cfg.rnn_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": cm.dense_init(ks[0], cfg.d_model, (r,), dt),
+        "w_g": cm.dense_init(ks[1], cfg.d_model, (r,), dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, r)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((r,), dt),
+        "w_a": cm.dense_init(ks[3], r, (r,), dt),
+        "b_a": jnp.zeros((r,), dt),
+        "w_i": cm.dense_init(ks[4], r, (r,), dt),
+        "b_i": jnp.zeros((r,), dt),
+        # Λ init so a ∈ (0.9, 0.999) at r=0.5 (Griffin appendix)
+        "lam": jax.random.uniform(ks[5], (r,), jnp.float32, 0.0, 1.0),
+        "w_out": cm.dense_init(ks[6], r, (cfg.d_model,), dt),
+    }
+
+
+def _rglru_gates(p, xc):
+    rg = jax.nn.sigmoid(
+        jnp.einsum("...r,rs->...s", xc, p["w_a"]).astype(jnp.float32) + p["b_a"]
+    )
+    ig = jax.nn.sigmoid(
+        jnp.einsum("...r,rs->...s", xc, p["w_i"]).astype(jnp.float32) + p["b_i"]
+    )
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * rg  # (..., R) fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * ig * xc.astype(
+        jnp.float32
+    )
+    return a, gated
+
+
+def rglru_block_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    cache: Optional[dict] = None,
+):
+    """Griffin recurrent block: in-proj → causal conv → RG-LRU → gate → out.
+    cache = {"h": (B,R) fp32, "conv": (B,cw-1,R)}.  Returns (y, new_cache)."""
+    xm = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_g"]))
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv1d(xm, p["conv_w"], p["conv_b"], conv_cache)
+
+    a, b = _rglru_gates(p, xc)
+
+    if cache is None:
+        # associative linear scan over the sequence
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+    else:
+        h = a * cache["h"][:, None].astype(jnp.float32) + b  # (B,1,R)
+        new_cache = {"h": h[:, 0], "conv": new_conv}
+
+    y = jnp.einsum("bsr,rd->bsd", (h.astype(x.dtype) * gate), p["w_out"])
+    if cache is not None:
+        new_cache["conv"] = new_conv
+    return y, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int):
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), cm.dtype_of(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    dt = cm.dtype_of(cfg)
+    r = cfg.rnn_width or 2 * cfg.d_model
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": cm.dense_init(ks[0], cfg.d_model, (2 * r,), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, r)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((r,), dt),
+        # block-diagonal per-head projections (official xLSTM design)
+        "wq_h": (jax.random.normal(ks[2], (nh, r // nh, r // nh)) / jnp.sqrt(r // nh)).astype(dt),
+        "wk_h": (jax.random.normal(ks[3], (nh, r // nh, r // nh)) / jnp.sqrt(r // nh)).astype(dt),
+        "wv_h": (jax.random.normal(ks[4], (nh, r // nh, r // nh)) / jnp.sqrt(r // nh)).astype(dt),
+        "w_if": cm.dense_init(ks[5], r, (2 * nh,), jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((nh,)), jnp.linspace(3.0, 6.0, nh)]
+        ),  # forget-gate bias init
+        "gn_scale": jnp.zeros((r,), dt),
+        "w_down": cm.dense_init(ks[6], r, (cfg.d_model,), dt),
+    }
+
+
+def _heads(x, nh):
+    b, s, r = x.shape
+    return x.reshape(b, s, nh, r // nh)
+
+
+def mlstm_parallel(q, k, v, i_raw, log_f):
+    """Stabilized parallel mLSTM: q,k,v (B,S,NH,DH) fp32; gates (B,S,NH) fp32.
+    Returns h (B,S,NH,DH)."""
+    fcum = jnp.cumsum(log_f, axis=1)  # (B,S,NH) F_t
+    dmat = (
+        fcum[:, :, None, :] - fcum[:, None, :, :] + i_raw[:, None, :, :]
+    )  # (B,t,s,NH): F_t - F_s + i_s
+    tt, ss = dmat.shape[1], dmat.shape[2]
+    causal = jnp.tril(jnp.ones((tt, ss), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,t,1,NH)
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k)  # k pre-scaled by 1/sqrt(DH)
+    c = scores * dexp
+    denom = jnp.maximum(jnp.abs(jnp.sum(c, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,t,NH)
+    return jnp.einsum("btsh,bshd->bthd", c, v) / denom[..., None]
+
+
+def mlstm_chunkwise(q, k, v, i_raw, log_f, chunk: int):
+    """Chunkwise-parallel mLSTM: O(S·chunk) memory instead of O(S²).
+    Sequential scan over chunks carrying (C, n, m) state; parallel within."""
+    b, s, nh, dh = q.shape
+    nc = s // chunk
+    rs = lambda x: x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, fc = rs(i_raw), rs(log_f)
+
+    def body(carry, inp):
+        C, n, m = carry  # (B,NH,DH,DH), (B,NH,DH), (B,NH)
+        qb, kb, vb, ib, fb = inp  # (B,chunk,...)
+        fcs = jnp.cumsum(fb, axis=1)  # within-chunk cumulative log f
+        ftot = fcs[:, -1]  # (B,NH)
+        # intra-chunk decay matrix
+        dmat = fcs[:, :, None, :] - fcs[:, None, :, :] + ib[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        # inter-chunk: query t sees state C with decay fcs_t, offset by m
+        m_inter = fcs + m[:, None, :]  # (B,chunk,NH)
+        m_intra = jnp.max(dmat, axis=2)  # (B,chunk,NH)
+        m_new = jnp.maximum(m_inter, m_intra)
+        dexp = jnp.exp(dmat - m_new[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * dexp
+        inter_w = jnp.exp(m_inter - m_new)  # (B,chunk,NH)
+        h_intra = jnp.einsum("btsh,bshd->bthd", scores, vb)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * inter_w[..., None]
+        norm_intra = jnp.sum(scores, axis=2)  # (B,chunk,NH)
+        norm_inter = jnp.einsum("bthd,bhd->bth", qb, n) * inter_w
+        denom = jnp.maximum(
+            jnp.abs(norm_intra + norm_inter), jnp.exp(-m_new)
+        )
+        h = (h_intra + h_inter) / denom[..., None]
+        # state update: C' = exp(ftot + m - m_state')·C + Σ_s exp(F_tot - F_s + i_s - m')·k v
+        m_state = jnp.maximum(ftot + m, jnp.max(ftot[:, None] - fcs + ib, axis=1))
+        carry_decay = jnp.exp(ftot + m - m_state)  # (B,NH)
+        kv_decay = jnp.exp(ftot[:, None] - fcs + ib - m_state[:, None])  # (B,chunk,NH)
+        C2 = carry_decay[:, :, None, None] * C + jnp.einsum(
+            "bshd,bsh,bshe->bhde", kb, kv_decay, vb
+        )
+        n2 = carry_decay[:, :, None] * n + jnp.einsum("bshd,bsh->bhd", kb, kv_decay)
+        return (C2, n2, m_state), h
+
+    C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    return hs.swapaxes(0, 1).reshape(b, s, nh, dh)
+
+
+def mlstm_block_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    cache: Optional[dict] = None,
+    chunk: Optional[int] = None,
+):
+    """cache = {"C": (B,NH,DH,DH) f32, "n": (B,NH,DH) f32, "m": (B,NH) f32,
+    "conv": (B,cw-1,R)}."""
+    nh = cfg.n_heads
+    r = cfg.rnn_width or 2 * cfg.d_model
+    up = jnp.einsum("bsd,dr->bsr", x, p["w_up"])
+    main, gate = up[..., :r], up[..., r:]
+    conv_cache = cache["conv"] if cache is not None else None
+    c_out, new_conv = causal_conv1d(main, p["conv_w"], p["conv_b"], conv_cache)
+    c_out = jax.nn.silu(c_out)
+
+    dh = r // nh
+    q = jnp.einsum("bshd,hde->bshe", _heads(c_out, nh), p["wq_h"]).astype(jnp.float32)
+    k = jnp.einsum("bshd,hde->bshe", _heads(c_out, nh), p["wk_h"]).astype(
+        jnp.float32
+    ) / jnp.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", _heads(main, nh), p["wv_h"]).astype(jnp.float32)
+    gif = jnp.einsum("bsr,rg->bsg", main.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_raw, f_raw = gif[..., :nh], gif[..., nh:]
+    log_f = jax.nn.log_sigmoid(f_raw)
+
+    if cache is None:
+        if chunk and x.shape[1] % chunk == 0 and x.shape[1] > chunk:
+            h = mlstm_chunkwise(q, k, v, i_raw, log_f, chunk)
+        else:
+            h = mlstm_parallel(q, k, v, i_raw, log_f)
+        new_cache = None
+    else:
+        # single-step recurrent update
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        lf, ir = log_f[:, 0], i_raw[:, 0]  # (B,NH)
+        m_new = jnp.maximum(lf + m, ir)
+        fprime = jnp.exp(lf + m - m_new)[:, :, None, None]
+        iprime = jnp.exp(ir - m_new)[:, :, None, None]
+        k1, v1, q1 = k[:, 0], v[:, 0], q[:, 0]  # (B,NH,DH)
+        kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+        C2 = fprime * C + iprime * kv
+        n2 = fprime[..., 0] * n + iprime[..., 0] * k1
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n2)), jnp.exp(-m_new)
+        )
+        h = (jnp.einsum("bhd,bhde->bhe", q1, C2) / denom[..., None])[:, None]
+        new_cache = {"C": C2, "n": n2, "m": m_new, "conv": new_conv}
+
+    h = h.reshape(x.shape[0], x.shape[1], r).astype(x.dtype)
+    # per-head group norm
+    hh = _heads(h, nh)
+    hh = hh * jax.lax.rsqrt(
+        jnp.mean(jnp.square(hh.astype(jnp.float32)), -1, keepdims=True) + 1e-6
+    ).astype(h.dtype)
+    h = hh.reshape(h.shape) * (1.0 + p["gn_scale"])
+    out = jnp.einsum("bsr,rd->bsd", h * jax.nn.silu(gate), p["w_down"])
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int):
+    nh = cfg.n_heads
+    r = cfg.rnn_width or 2 * cfg.d_model
+    dh = r // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), cm.dtype_of(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar cell, strictly sequential)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    dt = cm.dtype_of(cfg)
+    r = cfg.d_model  # proj factor 1 for sLSTM
+    nh = cfg.n_heads
+    dh = r // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": cm.dense_init(ks[0], cfg.d_model, (4 * r,), jnp.float32),
+        "r_gates": (jax.random.normal(ks[1], (nh, 4, dh, dh)) / jnp.sqrt(dh)).astype(
+            jnp.float32
+        ),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((r,)), jnp.linspace(3.0, 6.0, r), jnp.zeros((2 * r,))]
+        ),
+        "gn_scale": jnp.zeros((r,), dt),
+        "w_out": cm.dense_init(ks[2], r, (cfg.d_model,), dt),
+    }
+
+
+def _slstm_step(p, nh, dh, carry, xg):
+    """carry: h,c,n,m each (B,NH,DH) f32; xg: (B,4R) input gate pre-acts."""
+    h, c, n, m = carry
+    b = h.shape[0]
+    rec = jnp.einsum("bhd,hgde->bhge", h, p["r_gates"])  # (B,NH,4,DH)
+    g = xg.reshape(b, 4, nh, dh).swapaxes(1, 2) + rec  # (B,NH,4,DH)
+    gi, gf, gz, go = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c2 = f_p * c + i_p * jnp.tanh(gz)
+    n2 = jnp.maximum(f_p * n + i_p, 1e-6)
+    h2 = jax.nn.sigmoid(go) * c2 / n2
+    return (h2, c2, n2, m_new), h2
+
+
+def slstm_block_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    cache: Optional[dict] = None,
+):
+    """cache = {"h","c","n","m"} each (B,NH,DH) f32."""
+    nh = cfg.n_heads
+    r = cfg.d_model
+    dh = r // nh
+    b, s, _ = x.shape
+    xg = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"]) + p["b_gates"]
+
+    if cache is None:
+        zeros = jnp.zeros((b, nh, dh), jnp.float32)
+        carry0 = (zeros, zeros, zeros + 1e-6, zeros - 1e30)
+        step = lambda carry, xt: _slstm_step(p, nh, dh, carry, xt)
+        _, hs = jax.lax.scan(step, carry0, xg.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)  # (B,S,NH,DH)
+        new_cache = None
+    else:
+        carry0 = (cache["h"], cache["c"], cache["n"], cache["m"])
+        (h2, c2, n2, m2), _ = _slstm_step(p, nh, dh, carry0, xg[:, 0])
+        h = h2[:, None]
+        new_cache = {"h": h2, "c": c2, "n": n2, "m": m2}
+
+    h = h.reshape(b, s, r)
+    hn = h * jax.lax.rsqrt(
+        jnp.mean(
+            jnp.square(h.reshape(b, s, nh, dh)), -1, keepdims=True
+        ).repeat(dh, -1).reshape(b, s, r)
+        + 1e-6
+    )
+    hn = (hn * (1.0 + p["gn_scale"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsr,rd->bsd", hn, p["w_out"]), new_cache
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z - 1e30}

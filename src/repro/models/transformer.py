@@ -1,0 +1,383 @@
+"""Generic composable LM transformer covering all assigned architectures.
+
+Layers are grouped into *super-blocks* (``cfg.pattern``) whose parameters are
+stacked along a leading ``n_repeats`` axis and driven by ``jax.lax.scan`` —
+this keeps HLO size and compile time independent of depth.  Heterogeneous
+patterns (gemma2 local/global pairs, griffin (rec,rec,attn), xlstm (7m,1s),
+llama4 (dense,moe)) all reduce to this scheme; a short unrolled ``remainder``
+absorbs non-divisible depths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, EncoderConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import recurrent as rec
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec) -> dict:
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {"norm_mix": jnp.zeros((cfg.d_model,), dt)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.init_mla(ks[0], cfg) if cfg.mla else attn.init_gqa(ks[0], cfg)
+    elif spec.mixer == "rglru":
+        p["rglru"] = rec.init_rglru(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = rec.init_mlstm(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["slstm"] = rec.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["norm_cross"] = jnp.zeros((cfg.d_model,), dt)
+        p["cross"] = attn.init_gqa(ks[1], cfg, cross=True)
+    if spec.mlp == "dense":
+        p["norm_mlp"] = jnp.zeros((cfg.d_model,), dt)
+        p["mlp"] = mlp_mod.init_mlp(ks[2], cfg)
+    elif spec.mlp == "moe":
+        p["norm_mlp"] = jnp.zeros((cfg.d_model,), dt)
+        p["moe"] = mlp_mod.init_moe(ks[2], cfg)
+    return p
+
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int):
+    if spec.mixer == "attn":
+        if cfg.mla:
+            return attn.init_mla_cache(cfg, batch, max_len)
+        return attn.init_gqa_cache(cfg, batch, max_len, window=spec.window)
+    if spec.mixer == "rglru":
+        return rec.init_rglru_cache(cfg, batch)
+    if spec.mixer == "mlstm":
+        return rec.init_mlstm_cache(cfg, batch)
+    if spec.mixer == "slstm":
+        return rec.init_slstm_cache(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def layer_fwd(
+    p: dict,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    h: Array,
+    *,
+    positions: Array,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    ctx: Optional[Array] = None,
+    mesh=None,
+    causal: bool = True,
+    mlstm_chunk: Optional[int] = None,
+):
+    """Returns (h, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    hin = cm.rms_norm(h, p["norm_mix"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.mla:
+            out, c2 = attn.mla_fwd(
+                p["attn"], cfg, hin, positions, cache=cache, cache_pos=cache_pos
+            )
+        else:
+            out, c2 = attn.gqa_fwd(
+                p["attn"], cfg, hin, positions,
+                window=spec.window, cache=cache, cache_pos=cache_pos,
+                causal=causal, mesh=mesh,
+            )
+    elif spec.mixer == "rglru":
+        out, c2 = rec.rglru_block_fwd(p["rglru"], cfg, hin, cache=cache)
+    elif spec.mixer == "mlstm":
+        out, c2 = rec.mlstm_block_fwd(
+            p["mlstm"], cfg, hin, cache=cache, chunk=mlstm_chunk
+        )
+    elif spec.mixer == "slstm":
+        out, c2 = rec.slstm_block_fwd(p["slstm"], cfg, hin, cache=cache)
+    else:
+        raise ValueError(spec.mixer)
+    h = h + out
+
+    if spec.cross_attn and ctx is not None:
+        xin = cm.rms_norm(h, p["norm_cross"], cfg.norm_eps)
+        out, _ = attn.gqa_fwd(p["cross"], cfg, xin, positions, ctx=ctx)
+        h = h + out
+
+    if spec.mlp == "dense":
+        h = h + mlp_mod.mlp_fwd(p["mlp"], cfg, cm.rms_norm(h, p["norm_mlp"], cfg.norm_eps))
+    elif spec.mlp == "moe":
+        out, a = mlp_mod.moe_fwd(
+            p["moe"], cfg, cm.rms_norm(h, p["norm_mlp"], cfg.norm_eps), mesh=mesh
+        )
+        h = h + out
+        aux = aux + a
+    return h, c2, aux
+
+
+# ---------------------------------------------------------------------------
+# LM (decoder stack + embeddings)
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cm.dtype_of(cfg)
+    n_rep = cfg.n_repeats
+
+    def init_block(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return tuple(init_layer(kk[i], cfg, s) for i, s in enumerate(cfg.pattern))
+
+    params = {
+        "embed": cm.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "blocks": jax.vmap(init_block)(jax.random.split(ks[1], n_rep)),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if cfg.remainder:
+        kk = jax.random.split(ks[2], len(cfg.remainder))
+        params["rem"] = tuple(
+            init_layer(kk[i], cfg, s) for i, s in enumerate(cfg.remainder)
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(ks[3], cfg.d_model, (cfg.padded_vocab,), dt)
+    if cfg.ctx_dim:
+        params["ctx_proj"] = cm.dense_init(ks[4], cfg.ctx_dim, (cfg.d_model,), dt)
+    if cfg.mtp:
+        params["mtp_norm"] = jnp.zeros((cfg.d_model,), dt)
+        params["mtp_proj"] = cm.dense_init(ks[5], cfg.d_model, (cfg.d_model,), dt)
+    return params
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int):
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_repeats,) + x.shape, x.dtype), tree
+        )
+
+    cache = {
+        "blocks": tuple(
+            stack(init_layer_cache(cfg, s, batch, max_len)) for s in cfg.pattern
+        )
+    }
+    if cfg.remainder:
+        cache["rem"] = tuple(
+            init_layer_cache(cfg, s, batch, max_len) for s in cfg.remainder
+        )
+    return cache
+
+
+def lm_fwd(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    ctx: Optional[Array] = None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    mesh=None,
+    causal: bool = True,
+    inputs_embeds: Optional[Array] = None,
+    remat: bool = False,
+    mlstm_chunk: Optional[int] = None,
+    return_hidden: bool = False,
+):
+    """Full-seq forward (cache=None) or cached decode/prefill step.
+
+    Returns (logits, new_cache, aux).  With ``return_hidden`` the final
+    hidden states are returned instead of logits (for chunked CE losses).
+    """
+    if inputs_embeds is not None:
+        h = inputs_embeds
+    else:
+        h = params["embed"][tokens] * jnp.asarray(
+            jnp.sqrt(cfg.d_model), cm.dtype_of(cfg)
+        )
+    b, s = h.shape[:2]
+    if cache is None:
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+    else:
+        positions = (cache_pos + jnp.arange(s))[None, :].repeat(b, 0)
+
+    if ctx is not None and "ctx_proj" in params:
+        ctx = jnp.einsum("btc,cd->btd", ctx, params["ctx_proj"])
+
+    def block_body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            bp, bc = xs, (None,) * len(cfg.pattern)
+        else:
+            bp, bc = xs
+        new_bc = []
+        for i, spec in enumerate(cfg.pattern):
+            h, c2, a = layer_fwd(
+                bp[i], cfg, spec, h,
+                positions=positions, cache=bc[i], cache_pos=cache_pos,
+                ctx=ctx, mesh=mesh, causal=causal, mlstm_chunk=mlstm_chunk,
+            )
+            aux = aux + a
+            new_bc.append(c2)
+        out_c = tuple(new_bc) if cache is not None else None
+        return (h, aux), out_c
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is None:
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), params["blocks"])
+        new_cache = None
+    else:
+        (h, aux), new_bcache = jax.lax.scan(
+            body, (h, aux0), (params["blocks"], cache["blocks"])
+        )
+        new_cache = {"blocks": new_bcache}
+
+    if cfg.remainder:
+        new_rem = []
+        for i, spec in enumerate(cfg.remainder):
+            c_in = cache["rem"][i] if cache is not None else None
+            h, c2, a = layer_fwd(
+                params["rem"][i], cfg, spec, h,
+                positions=positions, cache=c_in, cache_pos=cache_pos,
+                ctx=ctx, mesh=mesh, causal=causal, mlstm_chunk=mlstm_chunk,
+            )
+            new_rem.append(c2)
+            aux = aux + a
+        if cache is not None:
+            new_cache["rem"] = tuple(new_rem)
+
+    h = cm.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, new_cache, (aux, {})
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    if cfg.logit_softcap:
+        logits = cm.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+    extras = {}
+    if cfg.mtp:
+        mh = cm.rms_norm(h, params["mtp_norm"], cfg.norm_eps)
+        mh = jnp.einsum("bsd,de->bse", mh, params["mtp_proj"])
+        extras["mtp_logits"] = jnp.einsum("bsd,vd->bsv", mh, params["embed"])
+    return logits, new_cache, (aux, extras)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (for enc-dec archs: whisper) — frontend stub supplies embeddings
+# ---------------------------------------------------------------------------
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    e: EncoderConfig = cfg.encoder
+    return ArchConfig(
+        name=cfg.name + "-enc",
+        n_layers=e.n_layers,
+        d_model=e.d_model,
+        n_heads=e.n_heads,
+        n_kv_heads=e.n_heads,
+        head_dim=e.d_model // e.n_heads,
+        d_ff=e.d_ff,
+        vocab_size=256,
+        pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+        act=cfg.act,
+        dtype=cfg.dtype,
+    )
+
+
+def init_encoder(key, cfg: ArchConfig) -> dict:
+    ecfg = _encoder_cfg(cfg)
+    ks = jax.random.split(key, 3)
+
+    def init_block(k):
+        return (init_layer(k, ecfg, ecfg.pattern[0]),)
+
+    return {
+        "blocks": jax.vmap(init_block)(jax.random.split(ks[0], ecfg.n_repeats)),
+        "final_norm": jnp.zeros((ecfg.d_model,), cm.dtype_of(ecfg)),
+    }
+
+
+def encoder_fwd(params: dict, cfg: ArchConfig, frames: Array, mesh=None) -> Array:
+    """frames: (B, n_frames, d_enc) precomputed frame/patch embeddings (stub)."""
+    ecfg = _encoder_cfg(cfg)
+    b, s, _ = frames.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+
+    def body(h, bp):
+        h, _, _ = layer_fwd(
+            bp[0], ecfg, ecfg.pattern[0], h, positions=positions,
+            mesh=mesh, causal=False,
+        )
+        return h, None
+
+    h, _ = jax.lax.scan(body, frames, params["blocks"])
+    return cm.rms_norm(h, params["final_norm"], ecfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Top-level model: init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = {"lm": init_lm(k1, cfg)}
+    if cfg.encoder is not None:
+        params["encoder"] = init_encoder(k2, cfg)
+    return params
+
+
+def model_fwd(
+    params: dict,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    mesh=None,
+    remat: bool = False,
+    mlstm_chunk: Optional[int] = None,
+):
+    """Training / prefill forward.  ``batch`` = {"tokens", optional "ctx"}."""
+    ctx = batch.get("ctx")
+    if cfg.encoder is not None and ctx is not None:
+        ctx = encoder_fwd(params["encoder"], cfg, ctx, mesh=mesh)
+    logits, _, (aux, extras) = lm_fwd(
+        params["lm"], cfg, batch["tokens"], ctx=ctx, mesh=mesh,
+        remat=remat, mlstm_chunk=mlstm_chunk,
+    )
+    return logits, aux, extras
+
+
+def init_model_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return init_lm_cache(cfg, batch, max_len)
+
+
+def decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    cache: dict,
+    token: Array,
+    cache_pos,
+    *,
+    ctx: Optional[Array] = None,
+    mesh=None,
+):
+    """One-token decode.  token: (B, 1) int32.  Returns (logits, new_cache)."""
+    if cfg.encoder is not None and ctx is not None:
+        ctx = encoder_fwd(params["encoder"], cfg, ctx, mesh=mesh)
+    logits, new_cache, _ = lm_fwd(
+        params["lm"], cfg, token, ctx=ctx, cache=cache, cache_pos=cache_pos,
+        mesh=mesh,
+    )
+    return logits, new_cache

@@ -1,0 +1,40 @@
+"""Action space (paper Table II): 11 arms = Vega standalone, SDXL+Vega relay
+× s∈{5,10,15,20,25}, SD3.5-L+M relay × s∈{5,10,15,20,25}."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+RELAY_STEPS = (5, 10, 15, 20, 25)
+
+
+@dataclass(frozen=True)
+class Arm:
+    idx: int
+    family: Optional[str]  # "XL" | "F3" | None (standalone small)
+    relay_step: Optional[int]  # s, None for standalone
+    edge_pool: Optional[str]  # pool of M_L
+    device_pool: str  # pool of M_S (or the standalone model)
+    label: str
+
+
+def action_space() -> Tuple[Arm, ...]:
+    arms = [Arm(0, None, None, None, "vega", "vega-standalone")]
+    for i, s in enumerate(RELAY_STEPS):
+        arms.append(Arm(1 + i, "XL", s, "sdxl", "vega", f"sdxl+vega@s={s}"))
+    for i, s in enumerate(RELAY_STEPS):
+        arms.append(Arm(6 + i, "F3", s, "sd3l", "sd3m", f"sd35L+M@s={s}"))
+    return tuple(arms)
+
+
+ARMS = action_space()
+N_ARMS = len(ARMS)
+
+# pool replica counts (paper testbed: 8×4090 as 4 pools × 2 replicas)
+POOL_REPLICAS = {"sdxl": 2, "sd3l": 2, "sd3m": 2, "vega": 2}
+
+
+def pools_used(arm: Arm) -> Tuple[str, ...]:
+    if arm.edge_pool is None:
+        return (arm.device_pool,)
+    return (arm.edge_pool, arm.device_pool)

@@ -1,0 +1,80 @@
+"""Service latency model, calibrated to the paper's measured per-image
+denoise times (Table III):
+
+  SDXL 50 steps = 6.87 s → 137.4 ms/step        Vega: 71.3 ms/step
+  SD3.5-L 50 steps = 30.19 s → 603.8 ms/step    SD3.5-M: 229.7 ms/step
+
+Relay latency = s·step_L + (T_d − s')·step_S + transfer(latent) + queueing.
+The same arithmetic yields the paper's 2.10×/1.59× (XL) and 1.77×/1.59× (F3)
+speedups — reproduced in benchmarks/table3_relay_quality.py.  Network and
+battery are simulated (as in the paper's own testbed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.relay import FamilySpec, RelayPlan
+from repro.serving.arms import Arm
+
+STEP_COST = {  # seconds per denoising step
+    "sdxl": 0.1374,
+    "vega": 0.0713,
+    "sd3l": 0.6038,
+    "sd3m": 0.2297,
+}
+
+VRAM_GB = {"sdxl": 8.5, "vega": 3.2, "sd3l": 19.0, "sd3m": 6.5}
+
+LATENT_BYTES = {"XL": 128 * 128 * 4 * 2, "F3": 128 * 128 * 16 * 2}  # fp16 @1024²
+
+T_FULL = {"sdxl": 50, "vega": 25, "sd3l": 50, "sd3m": 50}
+
+
+@dataclass
+class LatencyBreakdown:
+    edge_s: float
+    device_s: float
+    transfer_s: float
+
+    @property
+    def total(self) -> float:
+        return self.edge_s + self.device_s + self.transfer_s
+
+
+def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0) -> float:
+    if family is None:
+        return 0.0
+    payload = LATENT_BYTES[family]
+    return rtt_ms / 1000.0 + payload * 8 / (bw_mbps * 1e6)
+
+
+def arm_latency(arm: Arm, plan: Optional[RelayPlan], rtt_ms: float,
+                rng: Optional[np.random.Generator] = None) -> LatencyBreakdown:
+    """Denoise + transfer latency for one arm (no queueing)."""
+    jitter = 1.0
+    if rng is not None:
+        jitter = float(np.clip(rng.normal(1.0, 0.03), 0.9, 1.15))
+    if arm.family is None:  # standalone small model on-device: no transfer
+        dev = STEP_COST[arm.device_pool] * T_FULL[arm.device_pool]
+        return LatencyBreakdown(0.0, dev * jitter, 0.0)
+    edge = STEP_COST[arm.edge_pool] * plan.s
+    dev = STEP_COST[arm.device_pool] * (
+        T_FULL[arm.device_pool] - plan.s_prime
+    )
+    return LatencyBreakdown(
+        edge * jitter, dev * jitter, transfer_time(arm.family, rtt_ms)
+    )
+
+
+def full_model_latency(pool: str) -> float:
+    return STEP_COST[pool] * T_FULL[pool]
+
+
+def arm_vram(arm: Arm) -> float:
+    v = VRAM_GB[arm.device_pool]
+    if arm.edge_pool:
+        v = max(v, VRAM_GB[arm.edge_pool])
+    return v

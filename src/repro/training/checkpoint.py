@@ -1,0 +1,119 @@
+"""Topology-independent checkpointing with elastic re-sharding.
+
+Checkpoints store the *logical* parameter tree (msgpack of numpy arrays +
+treedef metadata), independent of the mesh it was saved from.  On restore,
+arrays are placed against whatever mesh/sharding the new job uses — a job
+restarted on a different slice size resumes transparently (elastic scaling).
+
+Writes are atomic (tmp + rename) and versioned (``step_%08d``); a
+``latest`` symlink lets a restarted worker discover the newest complete
+checkpoint after a failure.  An async mode hands serialization to a
+background thread so the train loop never blocks on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_KEY_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _KEY_SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape), "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+
+
+def save(path, tree, *, step: Optional[int] = None, meta: Optional[dict] = None):
+    """Atomic checkpoint write.  ``tree`` may live on any mesh."""
+    path = Path(path)
+    if step is not None:
+        path = path / f"step_{step:08d}.ckpt"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    payload = {
+        "meta": meta or {},
+        "arrays": {k: _pack_array(v) for k, v in flat.items()},
+    }
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+    if step is not None:
+        latest = path.parent / "latest"
+        tmp_l = path.parent / ".latest.tmp"
+        if tmp_l.exists() or tmp_l.is_symlink():
+            tmp_l.unlink()
+        tmp_l.symlink_to(path.name)
+        os.replace(tmp_l, latest)
+    return path
+
+
+def save_async(path, tree, *, step=None, meta=None) -> threading.Thread:
+    """Snapshot to host memory synchronously, serialize in the background."""
+    host_tree = jax.device_get(tree)
+    t = threading.Thread(target=save, args=(path, host_tree),
+                         kwargs={"step": step, "meta": meta}, daemon=True)
+    t.start()
+    return t
+
+
+def restore(path, like, *, mesh=None, pspecs=None):
+    """Restore into the structure of ``like`` (a tree of arrays or
+    ShapeDtypeStructs).  With ``mesh``+``pspecs`` the arrays are placed
+    sharded — reshard-on-load for elastic restarts."""
+    path = Path(path)
+    if path.is_dir():
+        path = path / "latest"
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = _KEY_SEP.join(str(getattr(e, "key", getattr(e, "idx", e))) for e in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        a = arrays[key].astype(leaf.dtype)
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt {a.shape} vs expected {leaf.shape}")
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+    if mesh is not None and pspecs is not None:
+        from jax.sharding import NamedSharding
+
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree, pspecs
+        )
+    return tree, payload["meta"]
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        int(p.stem.split("_")[1]) for p in ckpt_dir.glob("step_*.ckpt")
+    )
+    return steps[-1] if steps else None

@@ -1,0 +1,114 @@
+"""AdamW with configurable state precision (fp32 / bf16 / int8-quantized)
+and a cosine-with-warmup schedule.  Pure-JAX, optax-free (offline container).
+
+Int8 states use row-wise symmetric quantization (distributed/compression.py):
+for the 671B MoE this takes the optimizer HBM from 8 B/param to ~2 B/param,
+which is what lets train_4k fit a single v5e pod (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import dequant_log8, quant_log8
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "fp32"  # fp32 | bf16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(c.warmup_steps, 1))
+    prog = jnp.clip(
+        (step - c.warmup_steps) / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+
+def _encode(x, mode: str):
+    if mode == "fp32":
+        return x.astype(jnp.float32)
+    if mode == "bf16":
+        return x.astype(jnp.bfloat16)
+    if mode == "int8":
+        # log-domain quantization: Adam moments span orders of magnitude
+        # within a row — linear int8 zeroes the small v entries and blows up
+        # m/√v (see tests/test_training.py::test_int8_states_track_fp32)
+        return quant_log8(x)
+    raise ValueError(mode)
+
+
+def _decode(x, mode: str):
+    if mode == "int8":
+        return dequant_log8(x)
+    return x.astype(jnp.float32)
+
+
+def adamw_init(params, c: OptConfig):
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _encode(z, c.state_dtype)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(params, grads, state, c: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+    count = state["count"] + 1
+    lr = schedule(c, count)
+    b1c = 1 - c.b1 ** count.astype(jnp.float32)
+    b2c = 1 - c.b2 ** count.astype(jnp.float32)
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def upd(p, g, m_enc, v_enc):
+        m = _decode(m_enc, c.state_dtype)
+        v = _decode(v_enc, c.state_dtype)
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + c.eps)
+        decay = c.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), _encode(m, c.state_dtype), _encode(v, c.state_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "count": count},
+        {"grad_norm": gnorm, "lr": lr},
+    )

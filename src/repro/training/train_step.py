@@ -1,0 +1,169 @@
+"""Loss functions and the train/serve step factories that the launcher and
+the dry-run lower.
+
+The baseline loss materializes full (B,S,V) logits; ``chunk_ce`` is the
+memory-optimized path (scan over sequence chunks against the embedding
+matrix) used in the §Perf iterations.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import transformer as tr
+from repro.training.optimizer import OptConfig, adamw_update
+
+MTP_WEIGHT = 0.1
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) any-dtype; labels (B,S) int32. Mean CE in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_ce(h, w, labels, *, transpose_w: bool, softcap: Optional[float], chunk: int):
+    """CE without materializing (B,S,V): scan over S-chunks.
+
+    h: (B,S,D); w: (V,D) if transpose_w (tied embed) else (D,V).
+    """
+    b, s, d = h.shape
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).swapaxes(0, 1)  # (n,B,chunk,D)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        hb, lb = inp
+        if transpose_w:
+            logits = jnp.einsum("bsd,vd->bsv", hb, w)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", hb, w)
+        logits = logits.astype(jnp.float32)
+        if softcap:
+            logits = cm.softcap(logits, softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (b * s)
+
+
+def make_loss_fn(
+    cfg: ArchConfig,
+    *,
+    mesh=None,
+    remat: bool = True,
+    mlstm_chunk: Optional[int] = None,
+    ce_chunk: Optional[int] = None,
+):
+    def loss_fn(params, batch):
+        if ce_chunk:
+            h, _, (aux, _) = tr.lm_fwd(
+                params["lm"], cfg, batch["tokens"],
+                ctx=_encode_ctx(params, cfg, batch, mesh),
+                mesh=mesh, remat=remat, mlstm_chunk=mlstm_chunk,
+                return_hidden=True,
+            )
+            w = params["lm"]["embed"] if cfg.tie_embeddings else params["lm"]["lm_head"]
+            ce = chunked_ce(
+                h, w, batch["labels"], transpose_w=cfg.tie_embeddings,
+                softcap=cfg.logit_softcap, chunk=ce_chunk,
+            )
+            extras = {}
+        else:
+            logits, aux, extras = tr.model_fwd(
+                params, cfg, batch, mesh=mesh, remat=remat, mlstm_chunk=mlstm_chunk
+            )
+            ce = cross_entropy(logits, batch["labels"])
+        loss = ce + AUX_WEIGHT * aux
+        if "mtp_logits" in extras:
+            # predict token t+2: shift labels left by one more
+            mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+            loss = loss + MTP_WEIGHT * cross_entropy(extras["mtp_logits"], mtp_labels)
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def _encode_ctx(params, cfg, batch, mesh):
+    ctx = batch.get("ctx")
+    if cfg.encoder is not None and ctx is not None:
+        ctx = tr.encoder_fwd(params["encoder"], cfg, ctx, mesh=mesh)
+    return ctx
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OptConfig,
+    *,
+    mesh=None,
+    remat: bool = True,
+    mlstm_chunk: Optional[int] = None,
+    ce_chunk: Optional[int] = None,
+    accum_steps: int = 1,
+):
+    loss_fn = make_loss_fn(
+        cfg, mesh=mesh, remat=remat, mlstm_chunk=mlstm_chunk, ce_chunk=ce_chunk
+    )
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (
+                    jax.tree.map(lambda a, b: a + b, acc_g, g),
+                    acc_l + l,
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            parts = {}
+
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om, **parts}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, mesh=None, mlstm_chunk: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, _, _ = tr.model_fwd(
+            params, cfg, batch, mesh=mesh, mlstm_chunk=mlstm_chunk
+        )
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, mesh=None):
+    def serve_step(params, cache, token, cache_pos, ctx=None):
+        logits, new_cache = tr.decode_step(
+            params, cfg, cache, token, cache_pos, ctx=ctx, mesh=mesh
+        )
+        return logits, new_cache
+
+    return serve_step

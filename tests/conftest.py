@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the dry-run subprocess tests set
+# their own XLA_FLAGS (see test_distribution.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,82 @@
+"""Roofline parser correctness: trip-count-corrected FLOPs vs analytic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline as rf
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_trip_corrected():
+    n_iter, m = 8, 64
+
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, None, length=n_iter)
+        return h
+
+    x = jnp.zeros((m, m))
+    w = jnp.zeros((m, m))
+    comp = _compile(f, x, w)
+    ana = rf.analyze(comp.as_text(), comp.cost_analysis(), 1)
+    expected = n_iter * 2 * m * m * m
+    assert abs(ana["hlo_flops_per_chip"] - expected) / expected < 0.05
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+
+    m = 32
+    comp = _compile(f, jnp.zeros((m, m)), jnp.zeros((m, m)))
+    ana = rf.analyze(comp.as_text(), comp.cost_analysis(), 1)
+    expected = 12 * 2 * m ** 3
+    assert abs(ana["hlo_flops_per_chip"] - expected) / expected < 0.05
+
+
+def test_dominant_term_classification():
+    rec = rf.analyze("", {"flops": 0.0, "bytes accessed": 0.0}, 1)
+    assert rec["dominant"] in ("compute", "memory", "collective")
+
+
+def test_model_flops_estimate():
+    from repro import configs
+    from repro.analysis.params import active_params
+    from repro.configs.base import SHAPES
+
+    cfg = configs.get_config("qwen3-4b")
+    mf = rf.model_flops_estimate(cfg, SHAPES["train_4k"])
+    n = active_params(cfg)
+    assert mf == 6.0 * n * 256 * 4096
+    mf_dec = rf.model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert mf_dec == 2.0 * n * 128  # one token per sequence
+
+
+def test_param_formula_matches_init():
+    """Analytic param count ≈ actual init param count (reduced configs)."""
+    from repro import configs
+    from repro.analysis.params import total_params
+    from repro.configs.base import make_reduced
+    from repro.models import transformer as tr
+
+    for name in ("qwen3-4b", "recurrentgemma-9b", "deepseek-v3-671b"):
+        cfg = make_reduced(configs.get_config(name))
+        shapes = jax.eval_shape(
+            lambda: tr.init_model(jax.random.PRNGKey(0), cfg)
+        )
+        actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        analytic = total_params(cfg)
+        assert abs(actual - analytic) / actual < 0.12, (name, actual, analytic)

@@ -1,0 +1,73 @@
+"""Config registry invariants for all 10 assigned architectures."""
+import pytest
+
+from repro import configs
+from repro.analysis.params import active_params, total_params
+from repro.configs.base import applicable_shapes, make_reduced
+
+ALL = configs.list_archs()
+
+EXPECTED_PARAMS_B = {  # name → (min, max) total params in billions
+    "gemma2-27b": (25, 30),
+    "stablelm-1.6b": (1.4, 1.9),
+    "qwen3-4b": (3.5, 4.5),
+    "granite-8b": (7, 9),
+    "recurrentgemma-9b": (8, 11),
+    "whisper-medium": (0.6, 1.1),
+    "xlstm-1.3b": (1.0, 2.2),
+    "deepseek-v3-671b": (640, 700),
+    "llama4-maverick-400b-a17b": (370, 430),
+    "llama-3.2-vision-11b": (9, 12),
+}
+
+
+def test_ten_archs_registered():
+    assert len(ALL) == 10
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_layer_pattern_divides(name):
+    cfg = configs.get_config(name)
+    assert cfg.n_repeats >= 1
+    assert cfg.n_repeats * len(cfg.pattern) + len(cfg.remainder) == cfg.n_layers
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_count_matches_label(name):
+    cfg = configs.get_config(name)
+    lo, hi = EXPECTED_PARAMS_B[name]
+    total = total_params(cfg) / 1e9
+    assert lo <= total <= hi, f"{name}: {total:.2f}B outside [{lo},{hi}]"
+    assert active_params(cfg) <= total_params(cfg)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_moe_active_smaller(name):
+    cfg = configs.get_config(name)
+    if cfg.moe is not None:
+        assert active_params(cfg) < 0.2 * total_params(cfg)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_padded_vocab_divides_tp16(name):
+    cfg = configs.get_config(name)
+    assert cfg.padded_vocab % 16 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_shape_skip_rules(name):
+    cfg = configs.get_config(name)
+    shapes = {s.name for s in applicable_shapes(cfg)}
+    assert {"train_4k", "prefill_32k"} <= shapes
+    if name in ("recurrentgemma-9b", "xlstm-1.3b"):
+        assert "long_500k" in shapes
+    else:
+        assert "long_500k" not in shapes  # pure full attention → skipped
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_reduced_config_is_tiny(name):
+    cfg = make_reduced(configs.get_config(name))
+    assert total_params(cfg) < 5e6
+    assert cfg.n_repeats * len(cfg.pattern) + len(cfg.remainder) == cfg.n_layers

@@ -1,0 +1,231 @@
+"""Unit + property tests for the RISE core: schedules, sigma matching,
+samplers, relay, LinUCB, reward shaping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import linucb, samplers
+from repro.core.relay import FamilySpec, make_relay_plan, relay_generate
+from repro.core.reward import ETA, RewardInputs, compute_reward, dynamic_weights
+from repro.core.schedules import karras_sigmas, rf_times, sigma_match, vp_alpha_bar
+
+# ---------------------------------------------------------------------------
+# schedules + sigma matching
+# ---------------------------------------------------------------------------
+
+
+def test_karras_monotone_decreasing():
+    s = np.asarray(karras_sigmas(50))
+    assert len(s) == 51 and s[-1] == 0.0
+    assert np.all(np.diff(s) < 0)
+
+
+def test_rf_times_linear():
+    t = np.asarray(rf_times(50))
+    assert t[0] == 1.0 and t[-1] == 0.0
+    np.testing.assert_allclose(np.diff(t), -0.02, atol=1e-6)
+
+
+def test_sigma_match_identity_for_identical_ladders():
+    """Paper §III-B: identical linear schedules → s' = s trivially."""
+    t = rf_times(50)
+    for s in (5, 10, 15, 20, 25):
+        assert sigma_match(t, s, t) == s
+
+
+@given(st.integers(min_value=1, max_value=49))
+@settings(max_examples=20, deadline=None)
+def test_sigma_match_minimizes_gap(s):
+    edge = karras_sigmas(50)
+    dev = karras_sigmas(25)
+    sp = sigma_match(edge, s, dev)
+    gaps = np.abs(np.asarray(dev[:-1]) - float(edge[s]))
+    assert np.isclose(gaps[sp], gaps.min())
+
+
+def test_sigma_match_monotone_in_s():
+    edge = karras_sigmas(50)
+    dev = karras_sigmas(25)
+    sps = [sigma_match(edge, s, dev) for s in range(1, 50)]
+    assert all(b >= a for a, b in zip(sps, sps[1:]))
+
+
+# ---------------------------------------------------------------------------
+# samplers: exact recovery with oracle denoisers
+# ---------------------------------------------------------------------------
+
+
+def test_ddim_exact_with_oracle_eps():
+    """With the true ε(x,σ) for a known x0, DDIM lands exactly on x0."""
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (2, 4, 4, 2))
+    sigmas = karras_sigmas(30)
+
+    def eps_fn(params, x, sig, cond):
+        ab = vp_alpha_bar(sig)
+        return (x - jnp.sqrt(ab) * x0) / jnp.sqrt(1 - ab + 1e-20)
+
+    ab0 = vp_alpha_bar(sigmas[0])
+    n = jax.random.normal(jax.random.PRNGKey(1), x0.shape)
+    xT = jnp.sqrt(ab0) * x0 + jnp.sqrt(1 - ab0) * n
+    out, _ = samplers.ddim_sample(eps_fn, None, xT, sigmas, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x0), atol=1e-4)
+
+
+def test_rf_euler_exact_with_oracle_velocity():
+    key = jax.random.PRNGKey(2)
+    x0 = jax.random.normal(key, (2, 4, 4, 2))
+    times = rf_times(25)
+
+    def v_fn(params, x, t, cond):
+        return (x - x0) / jnp.maximum(t, 1e-9)
+
+    x1 = x0 + 1.0 * (jax.random.normal(jax.random.PRNGKey(3), x0.shape) - x0) * 0 + (
+        jax.random.normal(jax.random.PRNGKey(3), x0.shape) - x0
+    )  # x at t=1 on the linear path: x0 + 1·(n − x0) = n
+    out, _ = samplers.rf_euler_sample(v_fn, None, x1, times, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x0), atol=1e-4)
+
+
+def test_relay_equals_full_when_small_is_large():
+    """If M_S ≡ M_L on an identical ladder, relay output == full output."""
+    key = jax.random.PRNGKey(4)
+    x0 = jax.random.normal(key, (2, 4, 4, 2))
+    times = rf_times(20)
+    spec = FamilySpec("ID", "rf", times, times, latent_shape=(4, 4, 2))
+
+    def v_fn(params, x, t, cond):
+        return (x - x0) / jnp.maximum(t, 1e-9)
+
+    xT = jax.random.normal(jax.random.PRNGKey(5), x0.shape)
+    full, _ = samplers.rf_euler_sample(v_fn, None, xT, times, None)
+    plan = make_relay_plan(spec, 8)
+    assert plan.s_prime == 8 and plan.noise_gap == 0.0
+    relay, info = relay_generate(
+        spec, plan, v_fn, None, v_fn, None, xT, None, None
+    )
+    np.testing.assert_allclose(np.asarray(relay), np.asarray(full), atol=1e-6)
+    assert info["edge_steps"] == 8 and info["device_steps"] == 12
+    assert info["transfer_bytes"] == 2 * 4 * 4 * 2 * 4  # f32
+
+
+# ---------------------------------------------------------------------------
+# LinUCB
+# ---------------------------------------------------------------------------
+
+
+def _mk_params(**kw):
+    return linucb.LinUCBParams(**kw)
+
+
+def test_linucb_learns_linear_bandit():
+    """3 arms with linear rewards θ_a·c: LinUCB should pick the best arm for
+    each context most of the time after training."""
+    d, k = 8, 3
+    rng = np.random.default_rng(0)
+    thetas = rng.normal(size=(k, d)).astype(np.float32)
+    p = _mk_params(warmup=30, decay_k=150.0, n_min=2)
+    state = linucb.init_state(k, d)
+    key = jax.random.PRNGKey(0)
+    for t in range(400):
+        c = rng.normal(size=d).astype(np.float32)
+        c /= np.linalg.norm(c)
+        key, sub = jax.random.split(key)
+        arm = int(linucb.select(state, jnp.asarray(c), sub, p))
+        r = float(thetas[arm] @ c + 0.05 * rng.normal())
+        state = linucb.update(state, arm, jnp.asarray(c), r, p)
+    correct = 0
+    trials = 100
+    for t in range(trials):
+        c = rng.normal(size=d).astype(np.float32)
+        c /= np.linalg.norm(c)
+        key, sub = jax.random.split(key)
+        arm = int(linucb.select(state, jnp.asarray(c), sub, p))
+        correct += arm == int(np.argmax(thetas @ c))
+    assert correct / trials > 0.7, f"accuracy {correct/trials}"
+
+
+@given(
+    st.lists(st.floats(-1, 1), min_size=8, max_size=8),
+    st.floats(-5, 5),
+    st.integers(0, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_linucb_update_keeps_A_pd(ctx, reward, arm):
+    """A stays symmetric positive definite under arbitrary updates."""
+    p = _mk_params()
+    state = linucb.init_state(11, 8)
+    c = jnp.asarray(np.array(ctx, np.float32))
+    state = linucb.update(state, arm, c, reward, p)
+    A = np.asarray(state.A)
+    for a in range(11):
+        assert np.allclose(A[a], A[a].T, atol=1e-5)
+        assert np.linalg.eigvalsh(A[a]).min() > 0
+    s = np.asarray(linucb.scores(state, c, p))
+    assert np.all(np.isfinite(s))
+
+
+def test_forced_exploration_visits_all_arms():
+    p = _mk_params(n_min=2)
+    state = linucb.init_state(5, 8)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(1)
+    for t in range(5 * 2):
+        c = jnp.asarray(rng.normal(size=8).astype(np.float32))
+        key, sub = jax.random.split(key)
+        arm = int(linucb.select(state, c, sub, p))
+        state = linucb.update(state, arm, c, 0.0, p)
+    assert np.all(np.asarray(state.counts) >= 2)
+
+
+def test_availability_mask_respected():
+    p = _mk_params(n_min=0)
+    state = linucb.init_state(4, 8)
+    avail = jnp.asarray(np.array([False, True, False, False]))
+    key = jax.random.PRNGKey(0)
+    for _ in range(10):
+        key, sub = jax.random.split(key)
+        arm = int(linucb.select(state, jnp.ones(8) / 8, sub, p, avail))
+        assert arm == 1
+
+
+# ---------------------------------------------------------------------------
+# reward shaping
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.floats(0, 1), st.floats(0, 60), st.floats(0, 24), st.floats(0, 1),
+    st.booleans(), st.floats(0, 1), st.booleans(),
+)
+@settings(max_examples=50, deadline=None)
+def test_reward_bounded(q, t, vram, l_dev, txt, pref, bat):
+    r = compute_reward(
+        RewardInputs(
+            quality={"clip": q, "ir": q, "pick": 0.2 + 0.03 * q, "aes": 5 + q,
+                     "ocr": q},
+            t_total=t, m_vram=vram, l_dev=l_dev,
+            c_txt=float(txt), c_pref=pref, c_bat=float(bat),
+        )
+    )
+    assert -ETA < r < ETA
+
+
+def test_dynamic_weights_rules():
+    w0, t0, c0, _ = dynamic_weights(0.0, 0.0, 0.0)
+    w_txt, _, _, _ = dynamic_weights(1.0, 0.0, 0.0)
+    assert w_txt["ocr"] > w0["ocr"] and w_txt["clip"] < w0["clip"]
+    _, t_speed, _, _ = dynamic_weights(0.0, 1.0, 0.0)
+    assert t_speed > t0
+    _, t_bat, c_bat, _ = dynamic_weights(0.0, 0.0, 1.0)
+    assert c_bat > c0 and t_bat > t0
+
+
+def test_reward_prefers_fast_when_speed_requested():
+    q = {"clip": 0.5, "ir": 0.5, "pick": 0.22, "aes": 5.5, "ocr": 0.0}
+    slow = compute_reward(RewardInputs(q, 30.0, 8.0, 0.2, c_pref=1.0))
+    fast = compute_reward(RewardInputs(q, 2.0, 8.0, 0.2, c_pref=1.0))
+    assert fast > slow

@@ -1,0 +1,75 @@
+"""Diffusion substrate tests: synthetic task, training losses, oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import synth
+from repro.diffusion.train import train_model
+from repro.serving import metrics as qm
+
+
+def test_synth_deterministic():
+    p1 = synth.sample_prompt(42)
+    p2 = synth.sample_prompt(42)
+    np.testing.assert_array_equal(p1.content, p2.content)
+    np.testing.assert_array_equal(synth.render(p1), synth.render(p2))
+
+
+def test_embed_family_gap():
+    """XL's conditioning must not carry the glyph features; F3's must."""
+    p = synth.sample_prompt(7, p_text=1.0)
+    assert p.wants_text
+    e_xl = synth.embed(p, "XL")
+    e_f3 = synth.embed(p, "F3")
+    assert np.all(e_xl[13:] == 0)  # glyph features never reach XL
+    assert np.any(e_f3[13:] != 0)
+
+
+def test_text_pattern_in_channel3():
+    p = synth.sample_prompt(11, p_text=1.0)
+    lat = synth.render(p)
+    assert np.abs(lat[:, :, 3]).max() > 0.1
+    p2 = synth.sample_prompt(12, p_text=0.0)
+    assert np.abs(synth.render(p2)[:, :, 3]).max() == 0.0
+
+
+@pytest.mark.parametrize("family", ["XL", "F3"])
+def test_training_reduces_loss(family):
+    _, losses = train_model(jax.random.PRNGKey(0), family, "small", steps=30,
+                            batch=32)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_distillation_tracks_teacher():
+    from repro.diffusion.families import NET_CONFIGS
+    from repro.models import diffusion_nets as dn
+
+    teacher, _ = train_model(jax.random.PRNGKey(1), "F3", "large", steps=25,
+                             batch=32)
+    _, losses = train_model(
+        jax.random.PRNGKey(2), "F3", "small", steps=25, batch=32,
+        teacher=(teacher, NET_CONFIGS[("F3", "large")]),
+    )
+    assert losses[-1] < losses[0]
+
+
+def test_oracles_discriminate():
+    """The quality oracles must rank the true render above noise."""
+    p = synth.sample_prompt(5, p_text=1.0)
+    target = synth.render(p)
+    noise = np.random.default_rng(0).normal(size=target.shape).astype(np.float32)
+    q_good = qm.quality_metrics(target, p)
+    q_bad = qm.quality_metrics(noise, p)
+    assert q_good["clip"] > q_bad["clip"]
+    assert q_good["ir"] > q_bad["ir"]
+    assert q_good["ocr"] > 0.9 > q_bad["ocr"] + 0.3
+
+
+def test_ocr_phase_sensitive():
+    """A wrong-phase stripe pattern scores poorly — OCR is not a free lunch."""
+    p = synth.sample_prompt(5, p_text=1.0)
+    target = synth.render(p)
+    wrong = target.copy()
+    wrong[:, :, 3] = -wrong[:, :, 3]  # phase-flip the glyph band
+    assert qm.quality_metrics(wrong, p)["ocr"] < 0.2

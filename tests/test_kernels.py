@@ -1,0 +1,126 @@
+"""Pallas kernel validation (interpret mode) vs pure-jnp oracles, sweeping
+shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_sampler.ops import fused_cfg_step
+from repro.kernels.fused_sampler.ref import ddim_coeffs, fused_cfg_step_ref
+from repro.kernels.quant.ops import dequant_int8, quant_int8
+from repro.kernels.quant.ref import quant_int8_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,t,d,causal,window,cap",
+    [
+        (2, 4, 2, 64, 64, 32, True, None, None),
+        (1, 4, 4, 40, 40, 16, True, None, 50.0),  # softcap + unpadded len
+        (2, 8, 2, 32, 96, 32, False, None, None),  # cross-attn style
+        (1, 4, 1, 64, 64, 32, True, 16, None),  # MQA + sliding window
+        (1, 2, 2, 16, 128, 64, True, None, None),  # long kv
+    ],
+)
+def test_flash_attention_vs_ref(b, h, kv, s, t, d, causal, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, t, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cap,
+        block_q=16, block_k=16, interpret=True,
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@given(
+    b=st.integers(1, 3), s=st.integers(2, 70), r=st.integers(1, 70),
+)
+@settings(max_examples=8, deadline=None)
+def test_rglru_scan_property(b, s, r):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.uniform(k1, (b, s, r), minval=0.3, maxval=0.999)
+    bb = jax.random.normal(k2, (b, s, r)) * 0.2
+    out = rglru_scan(a, bb, block_s=16, block_r=16, interpret=True)
+    ref = rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["ddim", "rf"])
+@pytest.mark.parametrize("shape", [(4, 8, 8, 4), (2, 5, 7, 3), (1, 64)])
+def test_fused_cfg_step(mode, shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    ec = jax.random.normal(ks[1], shape, dtype)
+    eu = jax.random.normal(ks[2], shape, dtype)
+    c1, c2 = ddim_coeffs(0.4, 0.6) if mode == "ddim" else (-0.02, 0.0)
+    out = fused_cfg_step(
+        x, ec, eu, guidance=3.5, c1=c1, c2=c2, mode=mode, block_n=32,
+        interpret=True,
+    )
+    ref = fused_cfg_step_ref(x, ec, eu, guidance=3.5, mode=mode, c1=c1, c2=c2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_fused_ddim_matches_sampler_step():
+    """The affine (c1,c2) collapse must equal the Eq. 2 two-term DDIM form."""
+    from repro.core.schedules import vp_alpha_bar
+
+    sig_t, sig_s = 2.0, 1.2
+    ab_t, ab_s = float(vp_alpha_bar(sig_t)), float(vp_alpha_bar(sig_s))
+    c1, c2 = ddim_coeffs(ab_t, ab_s)
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (8, 16))
+    eps = jax.random.normal(jax.random.PRNGKey(4), (8, 16))
+    x0_hat = (x - np.sqrt(1 - ab_t) * eps) / np.sqrt(ab_t)
+    ref = np.sqrt(ab_s) * x0_hat + np.sqrt(1 - ab_s) * eps
+    out = fused_cfg_step(x, eps, eps, guidance=1.0, c1=c1, c2=c2,
+                         mode="ddim", interpret=True, block_n=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@given(
+    r=st.integers(1, 50), c=st.integers(1, 70),
+    scale=st.floats(0.01, 100.0),
+)
+@settings(max_examples=10, deadline=None)
+def test_quant_int8_roundtrip_property(r, c, scale):
+    x = jax.random.normal(jax.random.PRNGKey(5), (r, c)) * scale
+    q, s = quant_int8(x, interpret=True, block_r=16)
+    qr, sr = quant_int8_ref(x)
+    assert bool((q == qr).all())
+    deq = dequant_int8(q, s, interpret=True, block_r=16)
+    # error bounded by half a quantization bin per row
+    bound = np.asarray(s)[..., 0] * 0.5 + 1e-7
+    err = np.abs(np.asarray(deq) - np.asarray(x)).max(axis=-1)
+    assert np.all(err <= bound + 1e-6)
+
+
+def test_flash_attention_in_model_path():
+    """Kernel output slots into the model's attention contract (B,H,S,D)."""
+    b, h, kv, s, d = 1, 8, 4, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    assert out.shape == (b, h, s, d)
+    assert not bool(jnp.isnan(out).any())

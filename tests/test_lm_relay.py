@@ -1,0 +1,50 @@
+"""Beyond-paper LM prefix-relay extension (serving/lm_relay.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import make_reduced
+from repro.models import transformer as tr
+from repro.serving.lm_relay import greedy_decode, relay_decode, sequence_logprob
+
+CFG = make_reduced(configs.get_config("qwen3-4b"))
+
+
+def _params(seed=0):
+    return tr.init_model(jax.random.PRNGKey(seed), CFG)
+
+
+def test_relay_decode_prefix_is_shared():
+    """The first s tokens come from the large model; the rest differ only
+    by the small model's continuation."""
+    pl_, ps_ = _params(0), _params(1)
+    prompt = jnp.asarray(np.random.default_rng(0).integers(0, CFG.vocab_size, (1, 4)))
+    seq_large = greedy_decode(pl_, CFG, prompt, 8)
+    seq_relay, info = relay_decode(pl_, CFG, ps_, CFG, prompt, 4, 8)
+    np.testing.assert_array_equal(
+        np.asarray(seq_relay[:, : 4 + 4]), np.asarray(seq_large[:, : 4 + 4])
+    )
+    assert info["edge_tokens"] == 4 and info["device_tokens"] == 4
+    assert seq_relay.shape == (1, 4 + 8)
+
+
+def test_relay_full_edge_equals_large_only():
+    """s = total ⇒ relay output is exactly the large model's decode."""
+    pl_, ps_ = _params(0), _params(1)
+    prompt = jnp.asarray(np.random.default_rng(1).integers(0, CFG.vocab_size, (1, 4)))
+    seq_large = greedy_decode(pl_, CFG, prompt, 6)
+    seq_relay, _ = relay_decode(pl_, CFG, ps_, CFG, prompt, 6, 6)
+    np.testing.assert_array_equal(np.asarray(seq_relay), np.asarray(seq_large))
+
+
+def test_sequence_logprob_finite_and_better_for_own_samples():
+    pl_ = _params(0)
+    prompt = jnp.asarray(np.random.default_rng(2).integers(0, CFG.vocab_size, (1, 4)))
+    seq = greedy_decode(pl_, CFG, prompt, 6)
+    lp_own = sequence_logprob(pl_, CFG, seq)
+    rng = np.random.default_rng(3)
+    random_seq = jnp.asarray(rng.integers(0, CFG.vocab_size, seq.shape))
+    lp_rand = sequence_logprob(pl_, CFG, random_seq)
+    assert np.isfinite(lp_own) and np.isfinite(lp_rand)
+    assert lp_own > lp_rand  # greedy self-samples beat random tokens

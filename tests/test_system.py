@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests for the RISE system: real (tiny, quickly
+trained) diffusion families through relay → oracles → scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accel_baselines as ab
+from repro.core.relay import make_relay_plan, relay_generate
+from repro.diffusion import synth
+from repro.diffusion.train import get_or_train_families
+from repro.serving import metrics as qm
+from repro.serving.arms import ARMS
+from repro.serving.executor import Executor
+
+
+@pytest.fixture(scope="module")
+def families():
+    from pathlib import Path
+
+    # prefer the benchmark-grade checkpoints when available; else train a
+    # small 200-step pair (cached in results/ckpts_test across sessions)
+    if Path("results/ckpts/diffusion_F3.ckpt").exists():
+        return get_or_train_families(ckpt_dir="results/ckpts", verbose=False)
+    return get_or_train_families(
+        ckpt_dir="results/ckpts_test", steps=200, batch=32, verbose=False
+    )
+
+
+def _gen_quality(fam, fam_name, fn, params, sigmas, prompts):
+    cond = jnp.asarray(np.stack([synth.embed(p, fam_name) for p in prompts]))
+    xT = jax.random.normal(jax.random.PRNGKey(0),
+                           (len(prompts),) + fam.spec.latent_shape)
+    x, _ = ab.full_sample(fam.spec.kind, fn, params, xT, sigmas, cond)
+    mets = [qm.quality_metrics(np.asarray(x)[i], prompts[i])
+            for i in range(len(prompts))]
+    return {k: float(np.mean([m[k] for m in mets])) for k in mets[0]}
+
+
+def test_relay_preserves_quality_vs_small(families):
+    """Relay (s=20) must beat the standalone small model on semantic quality
+    — the paper's core claim at our scale."""
+    fam = families["F3"]
+    prompts = [synth.sample_prompt(i, p_text=0.0) for i in range(6000, 6012)]
+    cond = jnp.asarray(np.stack([synth.embed(p, "F3") for p in prompts]))
+    xT = jax.random.normal(jax.random.PRNGKey(1),
+                           (len(prompts),) + fam.spec.latent_shape)
+
+    plan = make_relay_plan(fam.spec, 20)
+    x_relay, _ = relay_generate(fam.spec, plan, fam.large_fn, fam.large_params,
+                                fam.small_fn, fam.small_params, xT, cond, cond)
+    x_small, _ = ab.full_sample(fam.spec.kind, fam.small_fn, fam.small_params,
+                                xT, fam.spec.sigmas_device, cond)
+    q_relay = np.mean([qm.quality_metrics(np.asarray(x_relay)[i], prompts[i])["clip"]
+                       for i in range(len(prompts))])
+    q_small = np.mean([qm.quality_metrics(np.asarray(x_small)[i], prompts[i])["clip"]
+                       for i in range(len(prompts))])
+    assert q_relay >= q_small - 0.02, (q_relay, q_small)
+
+
+def test_family_text_capability_gap(families):
+    """Finding 2: the F3 family renders text; the XL family cannot (its
+    conditioning never carries the glyph features)."""
+    prompts = [synth.sample_prompt(i, p_text=1.0) for i in range(7000, 7012)]
+    q_f3 = _gen_quality(families["F3"], "F3", families["F3"].large_fn,
+                        families["F3"].large_params,
+                        families["F3"].spec.sigmas_edge, prompts)
+    q_xl = _gen_quality(families["XL"], "XL", families["XL"].large_fn,
+                        families["XL"].large_params,
+                        families["XL"].spec.sigmas_edge, prompts)
+    assert q_f3["ocr"] > q_xl["ocr"] + 0.15, (q_f3["ocr"], q_xl["ocr"])
+
+
+def test_speedup_arithmetic_matches_paper():
+    """Calibrated per-step costs reproduce Table III's headline speedups."""
+    from repro.diffusion.families import SPECS
+    from repro.serving import latency as lat
+
+    # XL family, Fast (s=15): paper reports 2.10×
+    plan = make_relay_plan(SPECS["XL"](), 15)
+    t = (plan.s * lat.STEP_COST["sdxl"]
+         + (25 - plan.s_prime) * lat.STEP_COST["vega"])
+    speedup = lat.full_model_latency("sdxl") / t
+    assert abs(speedup - 2.10) < 0.25, speedup
+    # F3 family, Fast (s=15): paper reports 1.77×
+    plan = make_relay_plan(SPECS["F3"](), 15)
+    t = (plan.s * lat.STEP_COST["sd3l"]
+         + (50 - plan.s_prime) * lat.STEP_COST["sd3m"])
+    speedup = lat.full_model_latency("sd3l") / t
+    assert abs(speedup - 1.77) < 0.2, speedup
+
+
+def test_executor_serving_roundtrip(families):
+    """Executor → engine → LinUCB end-to-end on real generations."""
+    from repro.core.policies import RisePolicy
+    from repro.serving.engine import (ServingEngine, SimConfig, make_requests,
+                                      summarize)
+
+    ex = Executor(families)
+    cfg = SimConfig(n_requests=20, seed=5)
+    reqs = make_requests(cfg, seed0=8000)
+    qt = ex.quality_table(np.array([r.prompt_seed for r in reqs]))
+    eng = ServingEngine(RisePolicy(seed=0), qt, cfg, executor=ex)
+    s = summarize(eng.run(reqs))
+    assert np.isfinite(s["total_reward"])
+    assert s["mean_latency_s"] > 0
+
+
+def test_sada_and_deepcache_reduce_evals(families):
+    fam = families["F3"]
+    prompts = [synth.sample_prompt(i) for i in range(3)]
+    cond = jnp.asarray(np.stack([synth.embed(p, "F3") for p in prompts]))
+    xT = jax.random.normal(jax.random.PRNGKey(2), (3,) + fam.spec.latent_shape)
+    _, ev_full = ab.full_sample("rf", fam.large_fn, fam.large_params, xT,
+                                fam.spec.sigmas_edge, cond)
+    _, ev_dc = ab.deepcache_sample("rf", fam.large_fn, fam.large_params, xT,
+                                   fam.spec.sigmas_edge, cond, interval=2)
+    _, ev_sada = ab.sada_sample("rf", fam.large_fn, fam.large_params, xT,
+                                fam.spec.sigmas_edge, cond)
+    assert ev_dc <= ev_full // 2 + 1
+    assert ev_sada <= ev_full
