@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# CI gate: fast smoke first (hard gate), then the full tier-1 suite.
+#
+#   scripts/ci.sh          # fast smoke + full tier-1
+#   scripts/ci.sh fast     # fast smoke only (~2 min)
+#
+# The fast smoke deselects @pytest.mark.slow suites (family training,
+# subprocess dry-runs, reduced-model forwards) so the 6-minute full suite is
+# not the only signal.  The full tier-1 run carries a known-failing seed
+# baseline (scripts/known_failures.txt, recorded in ROADMAP.md "Open
+# items"), so the gate fails only on failures OUTSIDE that baseline.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast smoke (-m 'not slow') =="
+# the two --deselect'ed tests are part of the known-failing seed baseline
+# (ROADMAP.md "Open items"); everything else in the fast subset must pass
+python -m pytest -q -m "not slow" \
+    --deselect tests/test_analysis.py::test_scan_flops_trip_corrected \
+    --deselect tests/test_analysis.py::test_nested_scan_flops
+
+if [ "${1:-full}" = "full" ]; then
+    echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
+    out="$(mktemp)"
+    set +e
+    python -m pytest -q --tb=no | tee "$out"
+    rc=${PIPESTATUS[0]}
+    set -e
+    # exit code 1 = "tests failed" (triaged against the baseline below);
+    # anything else (2=interrupted, 3=internal, 4=usage, 5=none collected)
+    # is an aborted run, never a pass
+    if [ "$rc" -ne 0 ] && [ "$rc" -ne 1 ]; then
+        echo "pytest aborted (exit $rc)"
+        exit 1
+    fi
+    # collection/setup ERRORs count as failures too — they name the module
+    awk '/^(FAILED|ERROR)/ {print $2}' "$out" | sort > "$out.failed"
+    new_failures="$(comm -23 "$out.failed" <(sort scripts/known_failures.txt))"
+    fixed="$(comm -13 "$out.failed" <(sort scripts/known_failures.txt))"
+    if [ -n "$fixed" ]; then
+        echo "baseline tests now passing (prune known_failures.txt):"
+        echo "$fixed"
+    fi
+    if [ -n "$new_failures" ]; then
+        echo "NEW failures beyond the known baseline:"
+        echo "$new_failures"
+        exit 1
+    fi
+    echo "tier-1 OK: no failures beyond scripts/known_failures.txt"
+fi

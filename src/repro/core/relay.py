@@ -79,11 +79,20 @@ def relay_generate(
     guidance: float = 1.0,
     uncond_large=None,
     uncond_small=None,
+    compress_handoff: bool = False,
 ):
     """Run M_L for steps [0, s), hand the latent off, run M_S for [s', T_d).
 
+    With ``compress_handoff`` the edge→device latent is serialized through
+    the row-wise int8 quantizer (one scale per channel row), modelling the
+    constrained edge→device link: the device resumes from the *dequantized*
+    latent and the introduced deviation is accounted Eq. 1-style in
+    ``info["handoff_deviation_pct"]`` (a traced scalar under jit).
+
     Returns (x_final, info) where info carries the handoff latent, both
-    trajectories and the latent norms used by the Fig. 2 analysis.
+    trajectories and the latent norms used by the Fig. 2 analysis;
+    ``info["transfer_bytes"]`` is the actual bytes-on-wire of the handoff
+    payload (int8 + scales when compressed, raw latent otherwise).
     """
     sample = _sampler(spec.kind)
     x_mid, traj_edge = sample(
@@ -91,9 +100,22 @@ def relay_generate(
         start=0, stop=plan.s, uncond=uncond_large, guidance=guidance,
     )
     # ---- handoff: latent transferred edge → device (noise continuity via
-    # sigma matching; latent itself is used unchanged — shared latent space)
+    # sigma matching; shared latent space).  Optionally int8-quantized for
+    # the wire, in which case the device sees the round-tripped latent.
+    if compress_handoff:
+        from repro.distributed.compression import latent_roundtrip_int8
+
+        rec, transfer_bytes = latent_roundtrip_int8(x_mid)
+        handoff_dev = (
+            jnp.linalg.norm(rec - x_mid) / (jnp.linalg.norm(x_mid) + 1e-12)
+        ) * 100.0
+        x_relay = rec
+    else:
+        x_relay = x_mid
+        transfer_bytes = int(np.prod(x_mid.shape)) * x_mid.dtype.itemsize
+        handoff_dev = jnp.zeros(())
     x_final, traj_dev = sample(
-        small_fn, small_params, x_mid, spec.sigmas_device, cond_small,
+        small_fn, small_params, x_relay, spec.sigmas_device, cond_small,
         start=plan.s_prime, stop=spec.t_device, uncond=uncond_small,
         guidance=guidance,
     )
@@ -103,7 +125,8 @@ def relay_generate(
         "traj_device": traj_dev,
         "edge_steps": plan.s,
         "device_steps": spec.t_device - plan.s_prime,
-        "transfer_bytes": int(np.prod(x_mid.shape)) * x_mid.dtype.itemsize,
+        "transfer_bytes": transfer_bytes,
+        "handoff_deviation_pct": handoff_dev,
     }
     return x_final, info
 

@@ -29,6 +29,26 @@ def quant_error(x: Array) -> Array:
     return x.astype(jnp.float32) - dequant_rowwise(quant_rowwise(x))
 
 
+def latent_roundtrip_int8(x: Array):
+    """Channel-rows int8 round-trip of a (..., H, W, C) latent — the relay
+    handoff's wire format: each quantization row is one sample's spatial
+    slice of one channel, one fp32 scale each (C scales per latent,
+    matching ``repro.serving.latency.latent_wire_bytes``).  Rows never
+    cross leading (batch) dims, so a sample's reconstruction is independent
+    of its batch companions.
+
+    Returns (reconstructed latent in x's dtype, payload bytes on the wire).
+    jit-safe: the payload is a static Python int."""
+    xm = jnp.moveaxis(x, -1, -3)  # (..., C, H, W)
+    rows = xm.reshape(xm.shape[:-2] + (-1,))  # (..., C, H·W)
+    qs = quant_rowwise(rows)
+    rec = jnp.moveaxis(
+        dequant_rowwise(qs).reshape(xm.shape), -3, -1
+    ).astype(x.dtype)
+    payload = qs["q"].size * qs["q"].dtype.itemsize + qs["s"].size * 4
+    return rec, payload
+
+
 # ---------------------------------------------------------------------------
 # log-domain (dynamic-exponent) int8 — for Adam moments, whose within-row
 # dynamic range spans orders of magnitude (linear int8 zeroes small v and

@@ -21,6 +21,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="rise",
                     choices=["rise", "rr", "greedy", "ppo", "sac"])
+    ap.add_argument("--runtime", default="sequential",
+                    choices=["sequential", "continuous"],
+                    help="continuous = micro-batched discrete-event runtime "
+                         "with compressed latent handoff")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="disable int8 latent handoff compression "
+                         "(continuous runtime only)")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -48,9 +55,19 @@ def main(argv=None):
         "sac": lambda: pol.SACPolicy(seed=args.seed),
     }[args.policy]()
 
-    engine = ServingEngine(policy, qt, cfg, executor=ex)
+    runtime_cfg = None
+    if args.runtime == "continuous":
+        from repro.serving.runtime import RuntimeConfig
+
+        runtime_cfg = RuntimeConfig(compress_handoff=not args.no_compress)
+    engine = ServingEngine(policy, qt, cfg, executor=ex,
+                           runtime=args.runtime, runtime_cfg=runtime_cfg)
     records = engine.run(reqs)
     summary = summarize(records)
+    if engine.telemetry is not None:
+        from repro.serving.metrics import export_runtime_telemetry
+
+        summary["runtime_telemetry"] = export_runtime_telemetry(engine.telemetry)
     print(json.dumps(summary, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -106,16 +106,49 @@ class Record:
     wait_s: float
 
 
+def score_and_update(policy, arm_idx: int, ctx: np.ndarray, quality: dict,
+                     t_total: float, l_dev: float,
+                     dynamic_reward: bool = True) -> float:
+    """Reward computation + policy update, shared by the sequential engine
+    and the continuous runtime so their Records stay bit-compatible.
+
+    The ablation flag changes only the LEARNING signal; reported rewards
+    always use the full dynamic shaping so variants are comparable
+    (Table IV protocol).  Returns the reported reward."""
+    arm = ARMS[arm_idx]
+    ri = RewardInputs(
+        quality=quality, t_total=t_total, m_vram=lat.arm_vram(arm),
+        l_dev=l_dev, c_txt=ctx[1], c_pref=ctx[4], c_bat=ctx[3],
+    )
+    r_learn = compute_reward(ri, dynamic=dynamic_reward)
+    r_report = r_learn if dynamic_reward else compute_reward(ri, dynamic=True)
+    policy.update(ctx, arm_idx, r_learn)
+    return r_report
+
+
 class ServingEngine:
     def __init__(self, policy: Policy, quality_table, cfg: SimConfig,
-                 executor=None, seed0: int = 0, dynamic_reward: bool = True):
-        """quality_table[i, arm] → dict of quality metrics for request i."""
+                 executor=None, seed0: int = 0, dynamic_reward: bool = True,
+                 runtime: str = "sequential", runtime_cfg=None):
+        """quality_table[i, arm] → dict of quality metrics for request i.
+
+        ``runtime="sequential"`` keeps the original blocking per-request
+        loop (and its fault-injection hooks); ``runtime="continuous"``
+        delegates to the discrete-event continuous-batching runtime
+        (`repro.serving.runtime`) with micro-batch aggregation and
+        compressed latent handoff.  Records are interchangeable."""
         self.policy = policy
         self.qt = quality_table
         self.cfg = cfg
         self.executor = executor
         self.rng = np.random.default_rng(cfg.seed + 17)
         self.dynamic_reward = dynamic_reward
+        if runtime not in ("sequential", "continuous"):
+            raise ValueError(f"unknown runtime {runtime!r}")
+        self.runtime = runtime
+        self.runtime_cfg = runtime_cfg
+        self.telemetry = None  # populated by the continuous runtime
+        self.trace = {}  # per-request phase timestamps (continuous only)
 
     def _occupancies(self, pools: Pools, now: float) -> dict:
         return {
@@ -134,6 +167,17 @@ class ServingEngine:
         return out
 
     def run(self, requests: List[Request]) -> List[Record]:
+        if self.runtime == "continuous":
+            from repro.serving.runtime.engine import ContinuousRuntime
+
+            rt = ContinuousRuntime(
+                self.policy, self.qt, self.cfg, self.runtime_cfg,
+                executor=self.executor, dynamic_reward=self.dynamic_reward,
+            )
+            records = rt.run(requests)
+            self.telemetry = rt.telemetry
+            self.trace = rt.trace
+            return records
         pools = Pools(self.cfg)
         records = []
         pending = sorted(requests, key=lambda r: r.arrival)
@@ -172,23 +216,10 @@ class ServingEngine:
 
             q = self.qt[req.rid, arm_idx]
             l_dev = max(occ[_pool_key(p)] for p in pools_used(arm))
-            ri = RewardInputs(
-                quality=q,
-                t_total=t_total,
-                m_vram=lat.arm_vram(arm),
-                l_dev=l_dev,
-                c_txt=ctx[1],
-                c_pref=ctx[4],
-                c_bat=ctx[3],
+            r_report = score_and_update(
+                self.policy, arm_idx, ctx, q, t_total, l_dev,
+                dynamic_reward=self.dynamic_reward,
             )
-            # the ablation flag changes only the LEARNING signal; reported
-            # rewards always use the full dynamic shaping so variants are
-            # comparable (Table IV protocol)
-            r_learn = compute_reward(ri, dynamic=self.dynamic_reward)
-            r_report = (
-                r_learn if self.dynamic_reward else compute_reward(ri, dynamic=True)
-            )
-            self.policy.update(ctx, arm_idx, r_learn)
             records.append(
                 Record(req.rid, arm_idx, r_report, t_total, q, ctx, wait)
             )
@@ -211,7 +242,10 @@ def _static_plan(arm):
 def summarize(records: List[Record]) -> dict:
     qs = [r.quality for r in records]
     arr = lambda k: np.array([q[k] for q in qs])
-    has_text = np.array([q["ocr"] > 0 or True for q in qs])
+    # gate on the request's wants_text flag (ctx[1]), not on ocr > 0: a text
+    # request whose generation renders no legible text scores ocr == 0.0 and
+    # must still count toward the OCR aggregate
+    has_text = np.array([r.ctx[1] > 0.5 for r in records])
     rewards = np.array([r.reward for r in records])
     # decomposed rewards (quality / time) for the Fig. 6 style comparison
     t = np.array([r.t_total for r in records])
@@ -227,9 +261,8 @@ def summarize(records: List[Record]) -> dict:
         "ir": float(np.mean(arr("ir"))),
         "pick": float(np.mean(arr("pick"))),
         "aes": float(np.mean(arr("aes"))),
-        "ocr": float(
-            np.mean([q["ocr"] for q in qs if q["ocr"] > 0.0] or [0.0])
-        ),
+        "ocr": float(np.mean(arr("ocr")[has_text])) if has_text.any() else 0.0,
+        "text_fraction": float(np.mean(has_text)),
         "arm_histogram": np.bincount(
             [r.arm for r in records], minlength=N_ARMS
         ).tolist(),

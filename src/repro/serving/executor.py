@@ -34,14 +34,14 @@ class Executor:
     def plan(self, arm: Arm):
         return self.plans.get(arm.idx)
 
-    def _gen_fn(self, arm: Arm):
-        if arm.idx in self._gen_fns:
-            return self._gen_fns[arm.idx]
+    def _build_fn(self, arm: Arm, make_noise):
+        """Jitted generator for one arm; ``make_noise(rng, cond, shape)``
+        supplies the initial latent batch (single-key or per-sample-key)."""
         if arm.family is None:
             fam = self.families["XL"]  # Vega standalone
 
-            def fn(key, cond):
-                x = jax.random.normal(key, (cond.shape[0],) + fam.spec.latent_shape)
+            def fn(rng, cond):
+                x = make_noise(rng, cond, fam.spec.latent_shape)
                 out, _ = samplers.ddim_sample(
                     fam.small_fn, fam.small_params, x, fam.spec.sigmas_device, cond
                 )
@@ -51,23 +51,69 @@ class Executor:
             fam = self.families[arm.family]
             plan = self.plans[arm.idx]
 
-            def fn(key, cond):
-                x = jax.random.normal(key, (cond.shape[0],) + fam.spec.latent_shape)
+            def fn(rng, cond):
+                x = make_noise(rng, cond, fam.spec.latent_shape)
                 out, _ = relay_generate(
                     fam.spec, plan, fam.large_fn, fam.large_params,
                     fam.small_fn, fam.small_params, x, cond, cond,
                 )
                 return out
 
-        jitted = jax.jit(fn)
-        self._gen_fns[arm.idx] = jitted
-        return jitted
+        return jax.jit(fn)
+
+    def _gen_fn(self, arm: Arm):
+        if arm.idx not in self._gen_fns:
+            self._gen_fns[arm.idx] = self._build_fn(
+                arm,
+                lambda key, cond, shape: jax.random.normal(
+                    key, (cond.shape[0],) + shape
+                ),
+            )
+        return self._gen_fns[arm.idx]
 
     def generate(self, arm: Arm, seeds: np.ndarray) -> np.ndarray:
         family = arm.family or "XL"
         _, _, cond = synth.batch(seeds, family)
         key = jax.random.PRNGKey(int(seeds[0]) * 7919 + arm.idx)
         return np.asarray(self._gen_fn(arm)(key, jnp.asarray(cond)))
+
+    def _gen_fn_per_key(self, arm: Arm):
+        """Like ``_gen_fn`` but takes per-sample PRNG keys: each sample's
+        initial noise depends only on its own key, so outputs are invariant
+        to the pad-to-bucket batch shape (a batched draw from one key would
+        change every sample whenever the bucket changes)."""
+        cache_key = ("per_key", arm.idx)
+        if cache_key not in self._gen_fns:
+            self._gen_fns[cache_key] = self._build_fn(
+                arm,
+                lambda keys, cond, shape: jax.vmap(
+                    lambda k: jax.random.normal(k, shape)
+                )(keys),
+            )
+        return self._gen_fns[cache_key]
+
+    def generate_bucketed(self, arm: Arm, seeds: np.ndarray,
+                          buckets=(1, 2, 4, 8)) -> np.ndarray:
+        """Pad-to-bucket batched generation: the runtime aggregator's
+        contract that each arm compiles at most ``len(buckets)`` programs
+        regardless of micro-batch size.  Per-sample PRNG keys (folded from
+        each seed) make every sample's output identical whichever bucket
+        its micro-batch lands in; padded slots re-run the last seed and
+        are sliced off."""
+        from repro.serving.runtime.batching import bucketize
+
+        seeds = np.asarray(seeds)
+        n = len(seeds)
+        b = bucketize(n, tuple(sorted(buckets)))
+        if b > n:
+            seeds = np.concatenate([seeds, np.repeat(seeds[-1:], b - n)])
+        family = arm.family or "XL"
+        _, _, cond = synth.batch(seeds, family)
+        base = jax.random.PRNGKey(arm.idx * 7919)
+        keys = jax.vmap(lambda s: jax.random.fold_in(base, s))(
+            jnp.asarray(seeds, jnp.int32)
+        )
+        return np.asarray(self._gen_fn_per_key(arm)(keys, jnp.asarray(cond)))[:n]
 
     def quality_table(self, seeds: np.ndarray, arms=None) -> np.ndarray:
         """(N, n_arms) array of metric dicts — precomputed for the event sim

@@ -29,8 +29,26 @@ STEP_COST = {  # seconds per denoising step
 VRAM_GB = {"sdxl": 8.5, "vega": 3.2, "sd3l": 19.0, "sd3m": 6.5}
 
 LATENT_BYTES = {"XL": 128 * 128 * 4 * 2, "F3": 128 * 128 * 16 * 2}  # fp16 @1024²
+LATENT_CHANNELS = {"XL": 4, "F3": 16}
 
 T_FULL = {"sdxl": 50, "vega": 25, "sd3l": 50, "sd3m": 50}
+
+SCALE_BYTES = 4  # fp32 quantizer scale, one per channel row
+
+
+def latent_wire_bytes(family: Optional[str], compressed: bool = False) -> int:
+    """Bytes on the wire for one edge→device latent handoff.
+
+    Uncompressed: the fp16 latent as-is.  Compressed: the row-wise int8
+    payload (one byte per element) plus one fp32 scale per channel row —
+    the layout produced by the handoff transport's channel-wise
+    ``quant_rowwise`` (≈2× smaller than fp16)."""
+    if family is None:
+        return 0
+    if not compressed:
+        return LATENT_BYTES[family]
+    elems = LATENT_BYTES[family] // 2  # fp16 → element count
+    return elems + LATENT_CHANNELS[family] * SCALE_BYTES
 
 
 @dataclass
@@ -44,10 +62,11 @@ class LatencyBreakdown:
         return self.edge_s + self.device_s + self.transfer_s
 
 
-def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0) -> float:
+def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
+                  compressed: bool = False) -> float:
     if family is None:
         return 0.0
-    payload = LATENT_BYTES[family]
+    payload = latent_wire_bytes(family, compressed=compressed)
     return rtt_ms / 1000.0 + payload * 8 / (bw_mbps * 1e6)
 
 

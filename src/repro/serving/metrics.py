@@ -55,3 +55,12 @@ def quality_metrics(x_gen: np.ndarray, prompt: synth.Prompt) -> Dict[str, float]
     else:
         ocr = 0.0
     return {"clip": clip, "ir": ir, "pick": pick, "aes": aes, "ocr": ocr}
+
+
+def export_runtime_telemetry(telemetry) -> Dict[str, dict]:
+    """Per-pool runtime telemetry export (queue depth, batch occupancy,
+    bytes transferred) from a `repro.serving.runtime` telemetry object —
+    the benchmark/dashboard-facing view of the continuous-batching engine."""
+    if telemetry is None:
+        return {}
+    return telemetry.summary()

@@ -1,0 +1,16 @@
+"""Continuous-batching relay runtime: discrete-event two-phase execution
+with micro-batch aggregation and compressed latent handoff transport."""
+from repro.serving.runtime.batching import (BatchKey, MicroBatchAggregator,
+                                            batch_key_for, bucketize)
+from repro.serving.runtime.engine import ContinuousRuntime, RuntimeConfig
+from repro.serving.runtime.events import (DEVICE, EDGE, EventQueue, WorkItem)
+from repro.serving.runtime.telemetry import RuntimeTelemetry
+from repro.serving.runtime.transport import (HandoffTransport, TransportConfig,
+                                             channelwise_roundtrip)
+
+__all__ = [
+    "BatchKey", "MicroBatchAggregator", "batch_key_for", "bucketize",
+    "ContinuousRuntime", "RuntimeConfig", "EventQueue", "WorkItem",
+    "EDGE", "DEVICE", "RuntimeTelemetry", "HandoffTransport",
+    "TransportConfig", "channelwise_roundtrip",
+]

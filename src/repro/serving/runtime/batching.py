@@ -1,0 +1,115 @@
+"""Per-pool micro-batch aggregator with pad-to-bucket shapes.
+
+Queued work items that share a :class:`BatchKey` — (pool, family,
+relay_step, phase) — run the *same* jitted relay program, so they can be
+coalesced into one batched device launch.  Batch sizes are padded up to a
+small set of bucket shapes so each (key, bucket) pair compiles exactly one
+XLA program, mirroring ``Executor``'s per-arm jit cache: with the default
+buckets ``(1, 2, 4, 8)`` a pool hosts at most ``n_keys × 4`` programs.
+
+Dispatch is continuous-batching style: whenever a replica frees up the
+aggregator hands over whatever is queued for the oldest key (up to the
+largest bucket).  A short *linger* window lets a sub-maximal batch wait for
+companions when traffic is flowing, bounded so light traffic never trades
+latency for occupancy.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serving.arms import ARMS, Arm
+
+from .events import WorkItem
+
+DEFAULT_BUCKETS = (1, 2, 4, 8)
+
+
+@dataclass(frozen=True)
+class BatchKey:
+    """Identity of a jitted relay program: all items sharing a key are
+    shape- and weight-compatible and may be batched together."""
+
+    pool: str
+    family: Optional[str]
+    relay_step: Optional[int]
+    phase: str
+
+
+def batch_key_for(item: WorkItem) -> BatchKey:
+    arm: Arm = ARMS[item.arm_idx]
+    return BatchKey(item.pool, arm.family, arm.relay_step, item.phase)
+
+
+def bucketize(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket ≥ n (n must not exceed the largest bucket)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch of {n} exceeds largest bucket {buckets[-1]}")
+
+
+class MicroBatchAggregator:
+    """FIFO-across-keys micro-batcher for one replica pool."""
+
+    def __init__(self, pool: str, buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 linger_s: float = 0.25):
+        self.pool = pool
+        self.buckets = tuple(sorted(buckets))
+        self.max_batch = self.buckets[-1]
+        self.linger_s = linger_s
+        self.queues: "OrderedDict[BatchKey, Deque[WorkItem]]" = OrderedDict()
+
+    def push(self, item: WorkItem, now: float) -> None:
+        item.enqueue_t = now
+        key = batch_key_for(item)
+        if key.pool != self.pool:
+            raise ValueError(f"item for pool {key.pool} pushed to {self.pool}")
+        self.queues.setdefault(key, deque()).append(item)
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def _oldest_key(self) -> Optional[BatchKey]:
+        best, best_t = None, None
+        for key, q in self.queues.items():
+            if q and (best_t is None or q[0].enqueue_t < best_t):
+                best, best_t = key, q[0].enqueue_t
+        return best
+
+    def flush_deadline(self) -> Optional[float]:
+        """Time by which the oldest queued item must be dispatched even if
+        its batch is sub-maximal (enqueue time + linger)."""
+        key = self._oldest_key()
+        if key is None:
+            return None
+        return self.queues[key][0].enqueue_t + self.linger_s
+
+    def next_batch(self, now: float, force: bool = False
+                   ) -> Optional[Tuple[List[WorkItem], int]]:
+        """Pop the next dispatchable batch, or None if the aggregator
+        prefers to linger (caller should schedule a FLUSH at
+        :meth:`flush_deadline`).  Returns (items, padded_bucket_size)."""
+        # a full bucket anywhere dispatches immediately — never head-of-line
+        # blocked behind an older key that is still lingering sub-maximal
+        key = next(
+            (k for k, q in self.queues.items() if len(q) >= self.max_batch),
+            None,
+        )
+        full = key is not None
+        if not full:
+            key = self._oldest_key()
+        if key is None:
+            return None
+        q = self.queues[key]
+        n = min(len(q), self.max_batch)
+        # linger: a sub-maximal batch whose head is still young waits for
+        # companions — unless forced (flush deadline) or already full.
+        if (not full and not force
+                and now - q[0].enqueue_t < self.linger_s):
+            return None
+        items = [q.popleft() for _ in range(n)]
+        if not q:
+            del self.queues[key]
+        return items, bucketize(n, self.buckets)

@@ -1,0 +1,67 @@
+"""Discrete-event primitives for the continuous-batching relay runtime.
+
+The runtime replaces the sequential per-request loop of ``ServingEngine``
+with an event-driven simulation: request arrivals, batch completions,
+latent-transfer completions and aggregator flush deadlines are all events
+on a single monotone clock.  Ties are broken by insertion order so runs
+are fully deterministic for a given seed.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+from repro.core.context import Request
+
+# event kinds (ties at equal t break by insertion order — the heap key is
+# (t, seq); the kind itself never participates in ordering)
+ARRIVE = "arrive"
+BATCH_DONE = "batch_done"
+DEVICE_READY = "device_ready"
+FLUSH = "flush"
+
+EDGE = "edge"
+DEVICE = "device"
+
+
+@dataclass
+class WorkItem:
+    """One phase of one request's relay execution, queued on a pool.
+
+    A relay request becomes two sequential WorkItems (edge then device);
+    a standalone request becomes a single device-phase item.
+    """
+
+    req: Request
+    arm_idx: int
+    phase: str  # EDGE | DEVICE
+    pool: str
+    steps: int  # denoising steps of this phase (drives service time)
+    enqueue_t: float = 0.0  # when it entered the aggregator queue
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+
+class EventQueue:
+    """Min-heap of (time, seq, kind, payload) with deterministic ordering."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def pop(self) -> Tuple[float, str, Any]:
+        t, _, kind, payload = heapq.heappop(self._heap)
+        return t, kind, payload
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

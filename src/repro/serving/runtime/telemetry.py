@@ -1,0 +1,72 @@
+"""Per-pool runtime telemetry: queue depth, batch occupancy, wire bytes.
+
+Collected by the continuous-batching engine and summarized through
+``repro.serving.metrics.export_runtime_telemetry`` for benchmarks and
+dashboards.  Everything is plain Python counters — telemetry must never
+perturb the simulated clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass
+class PoolStats:
+    depth_samples: List[Tuple[float, int]] = field(default_factory=list)
+    n_batches: int = 0
+    batched_items: int = 0
+    padded_slots: int = 0  # bucket capacity left empty by padding
+    bytes_out: int = 0  # latent handoff bytes leaving this pool
+    busy_s: float = 0.0  # replica-seconds spent serving batches
+    forced_flushes: int = 0  # sub-maximal batches dispatched at linger deadline
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of dispatched bucket slots holding real work."""
+        cap = self.batched_items + self.padded_slots
+        return self.batched_items / cap if cap else 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.batched_items / self.n_batches if self.n_batches else 0.0
+
+
+class RuntimeTelemetry:
+    def __init__(self):
+        self.pools: Dict[str, PoolStats] = {}
+
+    def _pool(self, pool: str) -> PoolStats:
+        return self.pools.setdefault(pool, PoolStats())
+
+    def record_depth(self, pool: str, t: float, depth: int) -> None:
+        self._pool(pool).depth_samples.append((t, depth))
+
+    def record_batch(self, pool: str, n_items: int, bucket: int,
+                     duration_s: float, forced: bool) -> None:
+        p = self._pool(pool)
+        p.n_batches += 1
+        p.batched_items += n_items
+        p.padded_slots += bucket - n_items
+        p.busy_s += duration_s
+        if forced:
+            p.forced_flushes += 1
+
+    def record_transfer(self, pool: str, n_bytes: int) -> None:
+        self._pool(pool).bytes_out += n_bytes
+
+    def summary(self) -> Dict[str, dict]:
+        out = {}
+        for pool, p in sorted(self.pools.items()):
+            depths = [d for _, d in p.depth_samples]
+            out[pool] = {
+                "mean_queue_depth": float(sum(depths) / len(depths)) if depths else 0.0,
+                "max_queue_depth": int(max(depths)) if depths else 0,
+                "batch_occupancy": p.occupancy,
+                "mean_batch_size": p.mean_batch,
+                "n_batches": p.n_batches,
+                "forced_flushes": p.forced_flushes,
+                "bytes_transferred": p.bytes_out,
+                "busy_s": p.busy_s,
+            }
+        return out

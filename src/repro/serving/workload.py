@@ -1,0 +1,39 @@
+"""Synthetic workload scaffolding shared by benchmarks and tests: a
+structured quality table (no model execution) and a deterministic cycling
+policy for engine-vs-engine comparisons with identical arm decisions."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.serving.arms import ARMS, N_ARMS
+
+
+def synthetic_quality_table(reqs) -> np.ndarray:
+    """(N, n_arms) object array of quality dicts with the ordering structure
+    the scheduler learns from: later relay steps slightly better, F3 arms
+    strong at text (cf. tests/test_serving.py)."""
+    qt = np.empty((len(reqs), N_ARMS), dtype=object)
+    for i, r in enumerate(reqs):
+        for a in ARMS:
+            base = 0.55 + 0.1 * (a.relay_step or 0) / 25.0
+            ocr = (0.75 if a.family == "F3" else 0.08) if r.wants_text else 0.0
+            qt[i, a.idx] = {"clip": base, "ir": base, "pick": 0.2 + 0.03 * base,
+                            "aes": 5.0 + base, "ocr": ocr}
+    return qt
+
+
+class CyclePolicy(Policy):
+    """Deterministic arm cycle, blind to context and availability — two
+    engines replaying the same request stream see identical per-request
+    decisions, isolating runtime effects from policy effects."""
+
+    name = "Cycle"
+
+    def __init__(self):
+        self.i = 0
+
+    def select(self, ctx, avail):
+        arm = self.i % N_ARMS
+        self.i += 1
+        return arm

@@ -9,6 +9,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess dry-runs; minutes of wall time
+
 ROOT = Path(__file__).resolve().parent.parent
 
 

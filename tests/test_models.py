@@ -8,6 +8,8 @@ from repro import configs
 from repro.configs.base import make_reduced
 from repro.models import transformer as tr
 
+pytestmark = pytest.mark.slow  # full reduced-model forward passes
+
 ALL = configs.list_archs()
 B, S = 2, 16
 

@@ -13,6 +13,8 @@ from repro.serving import metrics as qm
 from repro.serving.arms import ARMS
 from repro.serving.executor import Executor
 
+pytestmark = pytest.mark.slow  # trains real (tiny) diffusion families
+
 
 @pytest.fixture(scope="module")
 def families():
