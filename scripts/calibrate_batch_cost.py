@@ -1,0 +1,174 @@
+#!/usr/bin/env python
+"""Calibrate ``RuntimeConfig.batch_cost_growth`` against real
+``Executor.generate_bucketed`` timings.
+
+The continuous runtime models batched service time analytically as
+
+    t(b) = t1 · (1 + growth · (b − 1))
+
+i.e. affine in the batch size: a batch amortizes streaming the model
+weights, so per-item cost shrinks toward ``growth·t1`` (the roofline
+argument — see benchmarks/roofline.py).  This script measures the real
+wall time of ``generate_bucketed`` at every bucket shape, fits (t1,
+growth) by least squares, and reports the fitted growth per arm plus a
+pooled estimate to paste into ``RuntimeConfig``.
+
+    PYTHONPATH=src python scripts/calibrate_batch_cost.py            # toy denoisers
+    PYTHONPATH=src python scripts/calibrate_batch_cost.py --real     # trained families
+
+The regression test (tests/test_batch_cost_calibration.py) runs the toy
+calibration and asserts the analytic affine model stays within tolerance
+of the measured curve, so the model shape itself is CI-guarded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Iterable, Tuple
+
+import numpy as np
+
+
+def _toy_families(hidden: int = 4096):
+    """Stand-in families whose denoiser does a real (batch-scaling) matmul
+    workload per step — at the repo's 8×8×4 latents a trivial denoiser is
+    all dispatch overhead and wall time would not scale with batch size,
+    which is the very effect being calibrated."""
+    from types import SimpleNamespace
+
+    import jax.numpy as jnp
+
+    from repro.diffusion.families import SPECS
+
+    rng = np.random.default_rng(0)
+    specs = {name: SPECS[name]() for name in ("XL", "F3")}
+    d = int(np.prod(specs["XL"].latent_shape))
+    w_in = jnp.asarray(rng.normal(size=(d, hidden)), jnp.float32) / np.sqrt(d)
+    w_out = jnp.asarray(rng.normal(size=(hidden, d)), jnp.float32) / np.sqrt(hidden)
+
+    def toy_fn(params, x, t, cond):
+        h = jnp.tanh(x.reshape(x.shape[0], -1) @ w_in)
+        return 0.5 * x + 0.01 * (h @ w_out).reshape(x.shape)
+
+    return {
+        name: SimpleNamespace(
+            spec=spec, large_fn=toy_fn, small_fn=toy_fn,
+            large_params=None, small_params=None,
+        )
+        for name, spec in specs.items()
+    }
+
+
+def _window(ex, arm, seeds, calls: int, clock) -> float:
+    t0 = clock()
+    for _ in range(calls):
+        ex.generate_bucketed(arm, seeds)
+    return (clock() - t0) / calls
+
+
+def measure_curve(ex, arm, buckets, windows: int = 5, calls: int = 3,
+                  clock=time.process_time):
+    """Service time per bucket: min over several interleaved windows of
+    the windowed-mean CPU time per call.
+
+    Shared CI machines make single measurements useless two ways at once —
+    wall clock is descheduling-dominated and CPU clocks are coarse
+    (~10 ms) and polluted by spinning XLA worker threads during
+    contention bursts.  The estimator counters both: the window mean
+    amortizes clock quantization over ``calls``; the min across windows
+    (interleaved across buckets, so a burst hits all buckets rather than
+    one) keeps the cleanest sample of each."""
+    best = {b: np.inf for b in buckets}
+    seeds = {
+        b: np.arange(b) + 1000 * b + arm.idx for b in buckets
+    }
+    for b in buckets:
+        ex.generate_bucketed(arm, seeds[b])  # warmup / compile
+    for _ in range(windows):
+        for b in buckets:
+            best[b] = min(best[b], _window(ex, arm, seeds[b], calls, clock))
+    return [float(best[b]) for b in buckets]
+
+
+def fit_growth(buckets: Iterable[int], times: Iterable[float]
+               ) -> Tuple[float, float]:
+    """Least-squares fit of t(b) = t1·(1 + g·(b−1)); returns (t1, g).
+
+    The model is linear in (t1, t1·g): regress t on [1, b−1].  Rows are
+    weighted by 1/t so the fit minimizes *relative* residuals — bucket
+    sizes span ~an order of magnitude of service time, and the runtime's
+    backlog estimates care about proportional, not absolute, error.  For
+    a truly affine curve the fit is still exact."""
+    b = np.asarray(list(buckets), float)
+    t = np.asarray(list(times), float)
+    w = 1.0 / np.clip(t, 1e-12, None)
+    design = np.stack([np.ones_like(b), b - 1.0], axis=1) * w[:, None]
+    (a0, a1), *_ = np.linalg.lstsq(design, t * w, rcond=None)
+    return float(a0), float(a1 / a0) if a0 > 0 else 0.0
+
+
+def calibrate(ex=None, arm_indices=(0, 2, 8), buckets=(1, 2, 4, 8),
+              windows: int = 5, calls: int = 3) -> Dict:
+    """Measure t(b) per arm, fit growth, and package the result."""
+    from repro.serving.arms import ARMS
+    from repro.serving.executor import Executor
+
+    if ex is None:
+        ex = Executor(_toy_families())
+    out = {"buckets": list(buckets), "arms": {}, "growth_pooled": None}
+    growths = []
+    for idx in arm_indices:
+        arm = ARMS[idx]
+        times = measure_curve(ex, arm, buckets, windows, calls)
+        t1, g = fit_growth(buckets, times)
+        model = [t1 * (1.0 + g * (b - 1)) for b in buckets]
+        # clip like fit_growth: a coarse CPU clock can legitimately read a
+        # 0.0 window, which must show up as a huge residual, not a crash
+        resid = max(
+            abs(m - t) / max(t, 1e-12) for m, t in zip(model, times)
+        )
+        out["arms"][arm.label] = {
+            "measured_s": times, "t1_s": t1, "growth": g,
+            "model_s": model, "max_rel_residual": resid,
+        }
+        growths.append(g)
+    out["growth_pooled"] = float(np.mean(growths))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true",
+                    help="calibrate against the trained relay families "
+                         "(trains them on first use) instead of toy denoisers")
+    ap.add_argument("--windows", type=int, default=5,
+                    help="interleaved measurement windows per bucket")
+    ap.add_argument("--calls", type=int, default=3,
+                    help="generate_bucketed calls per window")
+    ap.add_argument("--out", default="results/calibration_batch_cost.json")
+    args = ap.parse_args(argv)
+
+    ex = None
+    if args.real:
+        from repro.diffusion.train import get_or_train_families
+        from repro.serving.executor import Executor
+
+        ex = Executor(get_or_train_families(verbose=True))
+    cal = calibrate(ex=ex, windows=args.windows, calls=args.calls)
+    from repro.serving.runtime import RuntimeConfig
+
+    cal["runtime_config_default"] = RuntimeConfig().batch_cost_growth
+    print(json.dumps(cal, indent=2))
+    if args.out:
+        import os
+
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(cal, f, indent=2)
+        print(f"wrote {args.out}")
+    return cal
+
+
+if __name__ == "__main__":
+    main()

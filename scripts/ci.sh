@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# CI gate: fast smoke first (hard gate), then the full tier-1 suite.
+# CI gate: runtime parity + fast smoke first (hard gates), then the full
+# tier-1 suite.
 #
-#   scripts/ci.sh          # fast smoke + full tier-1
-#   scripts/ci.sh fast     # fast smoke only (~2 min)
+#   scripts/ci.sh          # parity + fast smoke + full tier-1
+#   scripts/ci.sh fast     # parity + fast smoke only (~3 min)
 #
 # The fast smoke deselects @pytest.mark.slow suites (family training,
 # subprocess dry-runs, reduced-model forwards) so the 6-minute full suite is
@@ -13,12 +14,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== runtime parity (differential: sequential vs continuous) =="
+# the lock on the default continuous runtime: identical arm decisions,
+# quality and fault counters across runtimes, under fault injection too
+python -m pytest -q tests/test_runtime_parity.py
+
 echo "== fast smoke (-m 'not slow') =="
-# the two --deselect'ed tests are part of the known-failing seed baseline
-# (ROADMAP.md "Open items"); everything else in the fast subset must pass
-python -m pytest -q -m "not slow" \
-    --deselect tests/test_analysis.py::test_scan_flops_trip_corrected \
-    --deselect tests/test_analysis.py::test_nested_scan_flops
+# parity suite already ran above as its own hard gate — don't repeat it
+python -m pytest -q -m "not slow" --ignore tests/test_runtime_parity.py
 
 if [ "${1:-full}" = "full" ]; then
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="

@@ -68,6 +68,34 @@ def _shape_dims(dims: str):
 
 
 @dataclass
+class CostSummary:
+    """Attribute view of XLA's ``compiled.cost_analysis()``.
+
+    Newer jaxlibs return the cost properties as a one-element *list* of
+    dicts (one per partition) instead of a bare dict; this normalizes both
+    shapes into a stable object so callers never index the raw payload."""
+
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    raw: dict = field(default_factory=dict)
+
+
+def cost_summary(cost) -> CostSummary:
+    """Normalize ``cost_analysis()`` output (dict, list-of-dicts, None or
+    an existing :class:`CostSummary`) into a :class:`CostSummary`."""
+    if isinstance(cost, CostSummary):
+        return cost
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = dict(cost or {})
+    return CostSummary(
+        flops=float(cost.get("flops", 0.0) or 0.0),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0) or 0.0),
+        raw=cost,
+    )
+
+
+@dataclass
 class HloStats:
     dot_flops: float = 0.0
     dot_bytes: float = 0.0
@@ -171,8 +199,9 @@ def analyze(compiled_text: str, cost: dict, n_chips: int, *,
         for k, v in st.coll_counts.items():
             coll_counts[k] += v * counts[c]
 
-    raw_flops = float(cost.get("flops", 0.0) or 0.0)
-    raw_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    c = cost_summary(cost)
+    raw_flops = c.flops
+    raw_bytes = c.bytes_accessed
     # scanned-dot correction applied on top of the once-counted aggregate
     once_dots = sum(st.dot_flops for st in comps.values())
     once_dot_bytes = sum(st.dot_bytes for st in comps.values())

@@ -1,6 +1,11 @@
 """Context vector construction (paper Eq. 5):
 
 c = [c_cplx, c_txt, c_net, c_bat, c_pref, l_vega, l_sdxl, l_sd3]  (d = 8)
+
+Engines may append extra features (live runtime telemetry, see
+``repro.serving.context.telemetry_features``) after the base 8 dims, so
+downstream consumers index the base features by position and policies are
+sized via ``repro.serving.context.context_dim``.
 """
 from __future__ import annotations
 
@@ -25,10 +30,12 @@ class Request:
     prompt_seed: int = 0
 
 
-def context_vector(req: Request, occupancy: dict) -> np.ndarray:
-    """occupancy: {"vega": l, "sdxl": l, "sd3": l} pool-occupancy fractions."""
+def context_vector(req: Request, occupancy: dict,
+                   extra: "np.ndarray | None" = None) -> np.ndarray:
+    """occupancy: {"vega": l, "sdxl": l, "sd3": l} pool-occupancy fractions.
+    ``extra``: optional trailing features (e.g. runtime telemetry)."""
     c_net = np.clip(np.log1p(req.rtt_ms) / np.log1p(2000.0), 0.0, 1.0)
-    return np.array(
+    base = np.array(
         [
             np.clip(req.complexity, 0.0, 1.0),
             1.0 if req.wants_text else 0.0,
@@ -41,3 +48,6 @@ def context_vector(req: Request, occupancy: dict) -> np.ndarray:
         ],
         dtype=np.float32,
     )
+    if extra is None:
+        return base
+    return np.concatenate([base, np.asarray(extra, np.float32)])

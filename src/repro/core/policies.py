@@ -42,11 +42,12 @@ class RisePolicy(Policy):
         use_context: bool = True,  # ablation: w/o Context
         forced_exploration: bool = True,  # ablation: w/o Forced Exploration
         fixed_relay_step: Optional[int] = None,  # ablation: Fixed Relay Step
+        ctx_dim: int = CTX_DIM,  # 8 base dims (+2 with telemetry_context)
     ):
         self.p = params or linucb.LinUCBParams()
         if not forced_exploration:
             self.p = linucb.LinUCBParams(**{**self.p.__dict__, "n_min": 0})
-        self.state = linucb.init_state(N_ARMS, CTX_DIM)
+        self.state = linucb.init_state(N_ARMS, ctx_dim)
         self.key = jax.random.PRNGKey(seed)
         self.use_context = use_context
         self.fixed_relay_step = fixed_relay_step

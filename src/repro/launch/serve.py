@@ -9,8 +9,29 @@ from __future__ import annotations
 
 import argparse
 import json
+import warnings
 
 import numpy as np
+
+
+def resolve_runtime_config(runtime: str, no_compress: bool):
+    """RuntimeConfig for the chosen runtime.
+
+    The sequential fallback has no latent-handoff transport, so
+    ``--no-compress`` is inert there — warn instead of silently ignoring
+    it (covered by tests/test_serving.py)."""
+    if runtime == "sequential":
+        if no_compress:
+            warnings.warn(
+                "--no-compress has no effect with the sequential runtime: "
+                "only the continuous runtime models the latent handoff "
+                "transport (drop the flag or use --runtime continuous)",
+                UserWarning, stacklevel=2,
+            )
+        return None
+    from repro.serving.runtime import RuntimeConfig
+
+    return RuntimeConfig(compress_handoff=not no_compress)
 
 
 def main(argv=None):
@@ -21,17 +42,27 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="rise",
                     choices=["rise", "rr", "greedy", "ppo", "sac"])
-    ap.add_argument("--runtime", default="sequential",
+    ap.add_argument("--runtime", default="continuous",
                     choices=["sequential", "continuous"],
-                    help="continuous = micro-batched discrete-event runtime "
-                         "with compressed latent handoff")
+                    help="continuous (default) = micro-batched discrete-event "
+                         "runtime with compressed latent handoff and fault "
+                         "injection; sequential = paper-faithful blocking loop")
     ap.add_argument("--no-compress", action="store_true",
                     help="disable int8 latent handoff compression "
                          "(continuous runtime only)")
+    ap.add_argument("--telemetry-context", action="store_true",
+                    help="append live runtime telemetry (queue depth, batch "
+                         "occupancy) to the LinUCB context vector")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
+    if args.telemetry_context and args.policy in ("ppo", "sac"):
+        ap.error("--telemetry-context is incompatible with the offline "
+                 "PPO/SAC baselines (their nets are trained on the fixed "
+                 "8-dim context); rr/greedy ignore the extra dims and rise "
+                 "sizes its state to the widened context")
 
     from repro.core import policies as pol
+    from repro.serving.context import context_dim
     from repro.diffusion.train import get_or_train_families
     from repro.serving.engine import ServingEngine, SimConfig, make_requests, summarize
     from repro.serving.executor import Executor
@@ -41,25 +72,22 @@ def main(argv=None):
     ex = Executor(fams)
 
     cfg = SimConfig(n_requests=args.requests, mean_interarrival=args.mu,
-                    seed=args.seed)
+                    seed=args.seed, telemetry_context=args.telemetry_context)
     reqs = make_requests(cfg)
     seeds = np.array([r.prompt_seed for r in reqs])
     print(f"precomputing quality table for {len(reqs)} requests × 11 arms...")
     qt = ex.quality_table(seeds)
 
+    d = context_dim(args.telemetry_context)
     policy = {
-        "rise": lambda: pol.RisePolicy(seed=args.seed),
+        "rise": lambda: pol.RisePolicy(seed=args.seed, ctx_dim=d),
         "rr": pol.RoundRobinPolicy,
         "greedy": pol.GreedyPolicy,
         "ppo": lambda: pol.PPOPolicy(seed=args.seed),
         "sac": lambda: pol.SACPolicy(seed=args.seed),
     }[args.policy]()
 
-    runtime_cfg = None
-    if args.runtime == "continuous":
-        from repro.serving.runtime import RuntimeConfig
-
-        runtime_cfg = RuntimeConfig(compress_handoff=not args.no_compress)
+    runtime_cfg = resolve_runtime_config(args.runtime, args.no_compress)
     engine = ServingEngine(policy, qt, cfg, executor=ex,
                            runtime=args.runtime, runtime_cfg=runtime_cfg)
     records = engine.run(reqs)

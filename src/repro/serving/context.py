@@ -1,0 +1,101 @@
+"""Shared serving context: the decision-time quantities both runtimes must
+compute identically.
+
+The sequential ``ServingEngine`` loop and the discrete-event
+``ContinuousRuntime`` used to duplicate three pieces of scheduler-visible
+state; any drift between the copies would silently break the
+identical-arm-decisions invariant the benchmarks and the differential
+parity suite (tests/test_runtime_parity.py) rely on.  They now live here:
+
+* :func:`aggregate_occupancy` — folding per-replica-pool occupancies into
+  the context vector's three load features
+  ({vega, sdxl, sd3: max(sd3l, sd3m)});
+* :func:`backlog_horizon` — the ``max_queue × 10 s`` backlog past which an
+  arm is masked unavailable;
+* :func:`straggler_slow` — the per-request straggler draw, deterministic
+  in ``(seed, rid)`` so a request straggles identically whichever engine
+  (and whichever micro-batch) executes it, making fault counters
+  comparable across runtimes.
+
+It also defines the optional telemetry context features (live queue depth
+and batch occupancy) appended to the LinUCB context vector when
+``SimConfig.telemetry_context`` is enabled.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Tuple
+
+import numpy as np
+
+from repro.core.context import CTX_DIM
+
+#: seconds of acceptable backlog per allowed queue slot (the availability
+#: mask horizon is ``max_queue ×`` this)
+BACKLOG_SECONDS_PER_SLOT = 10.0
+
+#: context load features → the replica pools they aggregate
+POOL_GROUPS: Dict[str, Tuple[str, ...]] = {
+    "vega": ("vega",),
+    "sdxl": ("sdxl",),
+    "sd3": ("sd3l", "sd3m"),
+}
+
+#: extra context dims appended when ``SimConfig.telemetry_context`` is on
+N_TELEMETRY_FEATURES = 2
+
+_POOL_KEY = {p: grp for grp, pools in POOL_GROUPS.items() for p in pools}
+
+
+def pool_key(pool: str) -> str:
+    """Context-feature key of a replica pool (sd3l / sd3m share "sd3")."""
+    return _POOL_KEY[pool]
+
+
+def aggregate_occupancy(per_pool: Mapping[str, float]) -> Dict[str, float]:
+    """Fold per-replica-pool occupancies into the context load features.
+
+    A relay is gated by its most loaded stage, so grouped pools aggregate
+    with max (the SD3 relay spans sd3l and sd3m)."""
+    return {
+        grp: max(per_pool[p] for p in pools)
+        for grp, pools in POOL_GROUPS.items()
+    }
+
+
+def backlog_horizon(cfg) -> float:
+    """Seconds of backlog past which an arm is masked unavailable."""
+    return cfg.max_queue * BACKLOG_SECONDS_PER_SLOT
+
+
+def straggler_slow(cfg, rid: int) -> float:
+    """Per-request straggler slowdown factor (≥ 1).
+
+    Keyed by ``(seed, rid)`` rather than drawn from an engine-order RNG
+    stream: batch composition and completion order differ between the
+    runtimes, so only a request-intrinsic draw lets the parity suite
+    assert their fault counters match."""
+    if cfg.straggler_prob <= 0.0:
+        return 1.0
+    u = np.random.default_rng([int(cfg.seed), int(rid), 0x57A6]).uniform()
+    return float(cfg.straggler_factor) if u < cfg.straggler_prob else 1.0
+
+
+def context_dim(telemetry_context: bool = False) -> int:
+    """LinUCB context dimension for a SimConfig's feature flags (policies
+    sized with this stay consistent with :func:`telemetry_features`)."""
+    return CTX_DIM + (N_TELEMETRY_FEATURES if telemetry_context else 0)
+
+
+def telemetry_features(queue_depth_norm: float,
+                       batch_occupancy: float) -> np.ndarray:
+    """Live-runtime features appended to the context vector when
+    ``SimConfig.telemetry_context`` is on: normalized queued-work depth and
+    the running batch-slot fill fraction (1.0 for the unbatched sequential
+    runtime)."""
+    return np.array(
+        [
+            np.clip(queue_depth_norm, 0.0, 1.0),
+            np.clip(batch_occupancy, 0.0, 1.0),
+        ],
+        dtype=np.float32,
+    )

@@ -17,6 +17,10 @@ from repro.core.policies import Policy
 from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
+from repro.serving.context import (aggregate_occupancy, backlog_horizon,
+                                   pool_key, straggler_slow,
+                                   telemetry_features)
+from repro.serving.runtime.telemetry import FaultCounters
 
 
 @dataclass
@@ -29,6 +33,9 @@ class SimConfig:
     straggler_factor: float = 1.0  # >1 → random slowdowns; engine re-issues
     straggler_prob: float = 0.0
     straggler_reissue: float = 2.5  # re-issue if slower than this × expected
+    # append live runtime telemetry (queue depth, batch occupancy) to the
+    # LinUCB context vector — size policies with serving.context.context_dim
+    telemetry_context: bool = False
 
 
 def make_requests(cfg: SimConfig, seed0: int = 0) -> List[Request]:
@@ -129,14 +136,17 @@ def score_and_update(policy, arm_idx: int, ctx: np.ndarray, quality: dict,
 class ServingEngine:
     def __init__(self, policy: Policy, quality_table, cfg: SimConfig,
                  executor=None, seed0: int = 0, dynamic_reward: bool = True,
-                 runtime: str = "sequential", runtime_cfg=None):
+                 runtime: str = "continuous", runtime_cfg=None):
         """quality_table[i, arm] → dict of quality metrics for request i.
 
-        ``runtime="sequential"`` keeps the original blocking per-request
-        loop (and its fault-injection hooks); ``runtime="continuous"``
-        delegates to the discrete-event continuous-batching runtime
-        (`repro.serving.runtime`) with micro-batch aggregation and
-        compressed latent handoff.  Records are interchangeable."""
+        ``runtime="continuous"`` (the default) delegates to the
+        discrete-event continuous-batching runtime (`repro.serving.runtime`)
+        with micro-batch aggregation, compressed latent handoff and the
+        full fault-injection model (replica failure + straggler re-issue).
+        ``runtime="sequential"`` is the explicit fallback: the original
+        paper-faithful blocking per-request loop.  Records, fault counters
+        and `summarize()` are interchangeable — the differential parity
+        suite (tests/test_runtime_parity.py) holds the two together."""
         self.policy = policy
         self.qt = quality_table
         self.cfg = cfg
@@ -149,22 +159,33 @@ class ServingEngine:
         self.runtime_cfg = runtime_cfg
         self.telemetry = None  # populated by the continuous runtime
         self.trace = {}  # per-request phase timestamps (continuous only)
+        self.fault_counters = FaultCounters()
 
     def _occupancies(self, pools: Pools, now: float) -> dict:
-        return {
-            "vega": pools.occupancy("vega", now),
-            "sdxl": pools.occupancy("sdxl", now),
-            "sd3": max(pools.occupancy("sd3l", now), pools.occupancy("sd3m", now)),
-        }
+        return aggregate_occupancy(
+            {p: pools.occupancy(p, now) for p in POOL_REPLICAS}
+        )
 
     def _avail(self, pools: Pools, now: float) -> np.ndarray:
         out = np.zeros(N_ARMS, bool)
-        horizon = self.cfg.max_queue * 10.0  # seconds of acceptable backlog
+        horizon = backlog_horizon(self.cfg)
         for a in ARMS:
             out[a.idx] = all(
                 pools.backlog(p, now) < horizon for p in pools_used(a)
             )
         return out
+
+    def _ctx_extra(self, pools: Pools, now: float):
+        """Sequential-runtime analog of the live telemetry features: mean
+        normalized backlog as queue depth; batch occupancy is 1.0 (every
+        dispatch is a singleton batch — no padded slots)."""
+        if not self.cfg.telemetry_context:
+            return None
+        horizon = backlog_horizon(self.cfg)
+        qd = float(np.mean([
+            min(pools.backlog(p, now), horizon) for p in POOL_REPLICAS
+        ])) / horizon
+        return telemetry_features(qd, 1.0)
 
     def run(self, requests: List[Request]) -> List[Record]:
         if self.runtime == "continuous":
@@ -177,14 +198,20 @@ class ServingEngine:
             records = rt.run(requests)
             self.telemetry = rt.telemetry
             self.trace = rt.trace
+            self.fault_counters = rt.fault_counters
             return records
         pools = Pools(self.cfg)
+        fc = self.fault_counters = FaultCounters()
+        if self.cfg.fail_replica is not None:
+            fc.replica_failures = 1
+            if np.isfinite(self.cfg.fail_replica[3]):
+                fc.replica_recoveries = 1
         records = []
         pending = sorted(requests, key=lambda r: r.arrival)
         for req in pending:
             now = req.arrival
             occ = self._occupancies(pools, now)
-            ctx = context_vector(req, occ)
+            ctx = context_vector(req, occ, self._ctx_extra(pools, now))
             avail = self._avail(pools, now)
             if not avail.any():
                 avail = np.ones(N_ARMS, bool)  # enqueue on everything busy
@@ -194,16 +221,16 @@ class ServingEngine:
             plan = self.executor.plan(arm) if self.executor else _static_plan(arm)
             lb = lat.arm_latency(arm, plan, req.rtt_ms, rng=self.rng)
 
-            # straggler injection + mitigation (re-issue on the twin replica)
-            slow = 1.0
-            if self.rng.uniform() < self.cfg.straggler_prob:
-                slow = self.cfg.straggler_factor
-            edge_dur = lb.edge_s * slow
-            if (
-                slow > self.cfg.straggler_reissue
-                and arm.edge_pool is not None
-            ):
-                edge_dur = lb.edge_s * min(slow, self.cfg.straggler_reissue)
+            # straggler injection + mitigation (re-issue on the twin
+            # replica caps the slowdown at straggler_reissue × expected);
+            # the draw is request-intrinsic so the continuous runtime's
+            # fault counters match ours for the same workload
+            slow = straggler_slow(self.cfg, req.rid)
+            if slow > 1.0 and arm.edge_pool is not None:
+                fc.stragglers_injected += 1
+                if slow > self.cfg.straggler_reissue:
+                    fc.stragglers_reissued += 1
+            edge_dur = lb.edge_s * min(slow, self.cfg.straggler_reissue)
 
             if arm.edge_pool is not None:
                 edge_done = pools.acquire(arm.edge_pool, now, edge_dur)
@@ -215,7 +242,7 @@ class ServingEngine:
             wait = t_total - lb.total
 
             q = self.qt[req.rid, arm_idx]
-            l_dev = max(occ[_pool_key(p)] for p in pools_used(arm))
+            l_dev = max(occ[pool_key(p)] for p in pools_used(arm))
             r_report = score_and_update(
                 self.policy, arm_idx, ctx, q, t_total, l_dev,
                 dynamic_reward=self.dynamic_reward,
@@ -227,7 +254,7 @@ class ServingEngine:
 
 
 def _pool_key(pool: str) -> str:
-    return {"sd3l": "sd3", "sd3m": "sd3"}.get(pool, pool)
+    return pool_key(pool)
 
 
 def _static_plan(arm):

@@ -1,16 +1,20 @@
 """Continuous-batching relay runtime: discrete-event two-phase execution
-with micro-batch aggregation and compressed latent handoff transport."""
+with micro-batch aggregation, compressed latent handoff transport and
+fault injection (replica failure/failover, straggler re-issue)."""
 from repro.serving.runtime.batching import (BatchKey, MicroBatchAggregator,
                                             batch_key_for, bucketize)
 from repro.serving.runtime.engine import ContinuousRuntime, RuntimeConfig
-from repro.serving.runtime.events import (DEVICE, EDGE, EventQueue, WorkItem)
-from repro.serving.runtime.telemetry import RuntimeTelemetry
+from repro.serving.runtime.events import (DEVICE, EDGE, REPLICA_FAIL,
+                                          REPLICA_RECOVER, STRAGGLER,
+                                          EventQueue, WorkItem)
+from repro.serving.runtime.telemetry import FaultCounters, RuntimeTelemetry
 from repro.serving.runtime.transport import (HandoffTransport, TransportConfig,
                                              channelwise_roundtrip)
 
 __all__ = [
     "BatchKey", "MicroBatchAggregator", "batch_key_for", "bucketize",
     "ContinuousRuntime", "RuntimeConfig", "EventQueue", "WorkItem",
-    "EDGE", "DEVICE", "RuntimeTelemetry", "HandoffTransport",
+    "EDGE", "DEVICE", "REPLICA_FAIL", "REPLICA_RECOVER", "STRAGGLER",
+    "FaultCounters", "RuntimeTelemetry", "HandoffTransport",
     "TransportConfig", "channelwise_roundtrip",
 ]

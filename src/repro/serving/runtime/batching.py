@@ -71,6 +71,10 @@ class MicroBatchAggregator:
     def depth(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
+    def pending_steps(self) -> int:
+        """Total denoising steps queued (drives the backlog estimate)."""
+        return sum(it.steps for q in self.queues.values() for it in q)
+
     def _oldest_key(self) -> Optional[BatchKey]:
         best, best_t = None, None
         for key, q in self.queues.items():

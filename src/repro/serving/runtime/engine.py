@@ -19,6 +19,15 @@ event-driven engine built for sustained mixed Poisson traffic:
 * **Backpressure** — arm availability masks out arms whose pools exceed a
   backlog horizon, and pool occupancy in the context vector reflects both
   busy replicas and queued work, steering the policy away from congestion.
+* **Fault tolerance** (sequential-engine parity) — replica failure
+  injection as REPLICA_FAIL / REPLICA_RECOVER events: a failed replica
+  accepts no new batches (in-flight work finishes) and its pool fails
+  over to the surviving twin; stragglers are detected as discrete
+  STRAGGLER events that re-issue the lagging batch on a free twin
+  replica, capping its completion at ``straggler_reissue ×`` the expected
+  service time — the same cap the sequential engine applies inline.
+  Straggler draws are request-intrinsic (``serving.context.straggler_slow``)
+  so fault counters match the sequential engine's exactly.
 
 Rewards, contexts and records are bit-compatible with the sequential
 engine (`repro.serving.engine.Record`), so `summarize()` and the Fig. 6 /
@@ -28,24 +37,31 @@ events (true async ordering) rather than in arrival order.
 Batch service time follows ``t(b) = t₁·(1 + growth·(b−1))`` — denoising at
 moderate batch sizes is dominated by streaming the model weights, which a
 batch amortizes, so per-item cost shrinks toward ``growth·t₁`` (see
-``benchmarks/roofline.py`` for the arithmetic-intensity argument).
+``benchmarks/roofline.py`` for the arithmetic-intensity argument; the
+growth coefficient is calibrated against real ``Executor.generate_bucketed``
+timings by ``scripts/calibrate_batch_cost.py``).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core.context import Request, context_vector
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
+from repro.serving.context import (aggregate_occupancy, backlog_horizon,
+                                   pool_key, straggler_slow,
+                                   telemetry_features)
 
 from .batching import DEFAULT_BUCKETS, MicroBatchAggregator
 from .events import (ARRIVE, BATCH_DONE, DEVICE, DEVICE_READY, EDGE, FLUSH,
-                     EventQueue, WorkItem)
+                     REPLICA_FAIL, REPLICA_RECOVER, STRAGGLER, EventQueue,
+                     WorkItem)
 from .telemetry import RuntimeTelemetry
-from .transport import HandoffTransport, TransportConfig
+from .transport import HandoffTransport
 
 
 @dataclass
@@ -66,6 +82,11 @@ class _PoolState:
     busy_until: List[float]
     agg: MicroBatchAggregator
     next_flush: float = -1.0  # dedupe pending FLUSH events
+    failed: Set[int] = field(default_factory=set)  # injected outages
+
+    @property
+    def n_alive(self) -> int:
+        return self.n - len(self.failed)
 
 
 @dataclass
@@ -78,30 +99,36 @@ class _Pending:
     ideal_s: float  # zero-queue latency, for wait accounting
 
 
+@dataclass
+class _Batch:
+    """In-flight batch bookkeeping: supports straggler re-issue (the
+    original completion event is superseded by bumping ``gen``)."""
+
+    pool: str
+    replica: int
+    items: List[WorkItem]
+    start: float
+    dur: float  # nominal (straggler-free) service time incl. jitter
+    gen: int = 0  # completion events carry the gen they were issued for
+    twin: Optional[int] = None  # replica occupied by a re-issue
+
+
 class ContinuousRuntime:
     """Drop-in ``run(requests) -> List[Record]`` engine; constructed by
-    ``ServingEngine`` when ``runtime="continuous"``."""
+    ``ServingEngine`` when ``runtime="continuous"`` (the default)."""
 
     def __init__(self, policy, quality_table, cfg, rt_cfg: Optional[RuntimeConfig] = None,
                  executor=None, dynamic_reward: bool = True):
         self.policy = policy
         self.qt = quality_table
         self.cfg = cfg  # SimConfig
-        if cfg.fail_replica is not None:
-            raise NotImplementedError(
-                "fail_replica injection is only modelled by the sequential "
-                "engine for now (ROADMAP open item) — refusing to run a "
-                "fault experiment with no fault"
-            )
         self.rt = rt_cfg or RuntimeConfig()
         self.executor = executor
         self.dynamic_reward = dynamic_reward
         self.rng = np.random.default_rng(cfg.seed + 17)
-        self.transport = HandoffTransport(TransportConfig(
-            compress=self.rt.compress_handoff, bw_mbps=self.rt.bw_mbps,
-            quality_sensitivity=self.rt.quality_sensitivity,
-        ))
+        self.transport = HandoffTransport.for_runtime(self.rt)
         self.telemetry = RuntimeTelemetry()
+        self.fault_counters = self.telemetry.faults
         self.trace: Dict[int, dict] = {}
 
     # ------------------------------------------------------------------
@@ -109,33 +136,54 @@ class ContinuousRuntime:
     # ------------------------------------------------------------------
 
     def _occ_pool(self, st: _PoolState, now: float) -> float:
-        busy = sum(1 for b in st.busy_until if b > now)
+        if st.n_alive == 0:
+            return 1.0
+        busy = sum(
+            1 for i, b in enumerate(st.busy_until)
+            if b > now and i not in st.failed
+        )
         queued = st.agg.depth() / st.agg.max_batch
-        return float(min(1.0, (busy + queued) / st.n))
+        return float(min(1.0, (busy + queued) / st.n_alive))
 
     def _occupancies(self, now: float) -> dict:
-        o = {p: self._occ_pool(st, now) for p, st in self.pools.items()}
-        return {"vega": o["vega"], "sdxl": o["sdxl"],
-                "sd3": max(o["sd3l"], o["sd3m"])}
+        return aggregate_occupancy(
+            {p: self._occ_pool(st, now) for p, st in self.pools.items()}
+        )
 
     def _backlog(self, st: _PoolState, now: float) -> float:
         """Estimated seconds until a newly queued item could start."""
-        busy_rem = sum(max(0.0, b - now) for b in st.busy_until) / st.n
+        if st.n_alive == 0:
+            return np.inf
+        busy_rem = sum(
+            max(0.0, b - now) for i, b in enumerate(st.busy_until)
+            if i not in st.failed
+        ) / st.n_alive
         growth, bmax = self.rt.batch_cost_growth, st.agg.max_batch
         amort = (1.0 + growth * (bmax - 1)) / bmax  # batched per-item factor
-        pend = sum(
-            it.steps * lat.STEP_COST[st.agg.pool] * amort
-            for q in st.agg.queues.values() for it in q
-        ) / st.n
+        pend = (
+            st.agg.pending_steps() * lat.STEP_COST[st.agg.pool] * amort
+        ) / st.n_alive
         return busy_rem + pend
 
     def _avail(self, now: float) -> np.ndarray:
-        horizon = self.cfg.max_queue * 10.0
+        horizon = backlog_horizon(self.cfg)
         backlog = {p: self._backlog(st, now) for p, st in self.pools.items()}
         out = np.zeros(N_ARMS, bool)
         for a in ARMS:
             out[a.idx] = all(backlog[p] < horizon for p in pools_used(a))
         return out
+
+    def _ctx_extra(self, now: float) -> Optional[np.ndarray]:
+        """Live telemetry features (queue depth, batch occupancy) for the
+        context vector, when ``cfg.telemetry_context`` is enabled."""
+        if not getattr(self.cfg, "telemetry_context", False):
+            return None
+        depth = sum(st.agg.depth() for st in self.pools.values())
+        qd = depth / (self.cfg.max_queue * len(self.pools))
+        occs = [
+            p.occupancy for p in self.telemetry.pools.values() if p.n_batches
+        ]
+        return telemetry_features(qd, float(np.mean(occs)) if occs else 1.0)
 
     # ------------------------------------------------------------------
     # event loop
@@ -153,9 +201,16 @@ class ContinuousRuntime:
         }
         self.pending: Dict[int, _Pending] = {}
         self.records: List[Record] = []
+        self._batch_seq = itertools.count()
+        self._inflight: Dict[int, _Batch] = {}
         evq = self.evq = EventQueue()
         for req in sorted(requests, key=lambda r: r.arrival):
             evq.push(req.arrival, ARRIVE, req)
+        if self.cfg.fail_replica is not None:
+            pool, idx, t_fail, t_recover = self.cfg.fail_replica
+            evq.push(t_fail, REPLICA_FAIL, (pool, idx))
+            if np.isfinite(t_recover):
+                evq.push(t_recover, REPLICA_RECOVER, (pool, idx))
 
         while evq:
             now, kind, payload = evq.pop()
@@ -167,6 +222,12 @@ class ContinuousRuntime:
                 self._on_device_ready(payload, now)
             elif kind == FLUSH:
                 self._dispatch(payload, now)
+            elif kind == STRAGGLER:
+                self._on_straggler(payload, now)
+            elif kind == REPLICA_FAIL:
+                self._on_replica_fail(*payload, now=now)
+            elif kind == REPLICA_RECOVER:
+                self._on_replica_recover(*payload, now=now)
         return self.records
 
     # ------------------------------------------------------------------
@@ -180,7 +241,7 @@ class ContinuousRuntime:
 
     def _on_arrive(self, req: Request, now: float) -> None:
         occ = self._occupancies(now)
-        ctx = context_vector(req, occ)
+        ctx = context_vector(req, occ, self._ctx_extra(now))
         avail = self._avail(now)
         if not avail.any():
             avail = np.ones(N_ARMS, bool)  # everything congested: enqueue anyway
@@ -210,21 +271,30 @@ class ContinuousRuntime:
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
 
-    def _batch_duration(self, pool: str, steps: int, bucket: int,
-                        phase: str) -> float:
+    def _batch_duration(self, pool: str, steps: int, bucket: int) -> float:
         base = steps * lat.STEP_COST[pool] * (
             1.0 + self.rt.batch_cost_growth * (bucket - 1)
         )
         jitter = float(np.clip(self.rng.normal(1.0, 0.03), 0.9, 1.15))
+        return base * jitter
+
+    def _batch_slowdown(self, items: List[WorkItem]) -> float:
+        """Straggler slowdown of a dispatched batch: the max over its
+        members' request-intrinsic draws (a batch moves at the pace of its
+        slowest sample).  Stragglers hit edge-phase work only, mirroring
+        the sequential engine (which slows lb.edge_s and leaves device
+        phases alone).  Counters are per request so they match the
+        sequential engine's bookkeeping exactly."""
+        if items[0].phase != EDGE or self.cfg.straggler_prob <= 0.0:
+            return 1.0
+        reissue = self.cfg.straggler_reissue
         slow = 1.0
-        # stragglers hit edge-phase work only, mirroring the sequential
-        # engine (which slows lb.edge_s and leaves device phases alone) —
-        # though here at batch granularity, not per request.  Mitigation is
-        # the same: re-issue on the twin replica caps the slowdown at
-        # straggler_reissue × expected.
-        if phase == EDGE and self.rng.uniform() < self.cfg.straggler_prob:
-            slow = min(self.cfg.straggler_factor, self.cfg.straggler_reissue)
-        return base * jitter * slow
+        for it in items:
+            s = straggler_slow(self.cfg, it.rid)
+            if s > 1.0:
+                self.telemetry.record_straggler(reissued=s > reissue)
+            slow = max(slow, s)
+        return slow
 
     def _dispatch(self, pool: str, now: float) -> None:
         st = self.pools[pool]
@@ -245,27 +315,93 @@ class ContinuousRuntime:
                 break
             items, bucket = res
             replica = st.free.pop()
-            dur = self._batch_duration(pool, items[0].steps, bucket,
-                                       items[0].phase)
-            st.busy_until[replica] = now + dur
+            dur = self._batch_duration(pool, items[0].steps, bucket)
+            slow = self._batch_slowdown(items)
+            bid = next(self._batch_seq)
+            self._inflight[bid] = _Batch(pool, replica, items, now, dur)
+            if slow > self.cfg.straggler_reissue:
+                # lagging batch: the detector trips once it has exceeded
+                # (reissue−1)× its expected time; the re-issued twin copy
+                # then needs one more nominal service time, so completion
+                # lands at reissue × expected — the sequential engine's cap
+                self.evq.push(
+                    now + dur * max(self.cfg.straggler_reissue - 1.0, 0.0),
+                    STRAGGLER, bid,
+                )
+            done = now + dur * slow
+            st.busy_until[replica] = done
             self.telemetry.record_batch(pool, len(items), bucket, dur, forced)
             if self.rt.trace:
                 for it in items:
                     self.trace[it.rid][f"{it.phase}_start"] = now
-            self.evq.push(now + dur, BATCH_DONE, (pool, replica, items))
+            self.evq.push(done, BATCH_DONE, (bid, 0))
         self.telemetry.record_depth(pool, now, st.agg.depth())
 
-    def _on_batch_done(self, pool: str, replica: int, items: List[WorkItem],
-                       now: float) -> None:
+    # ------------------------------------------------------------------
+    # fault handling
+    # ------------------------------------------------------------------
+
+    def _on_straggler(self, bid: int, now: float) -> None:
+        """Re-issue a still-straggling batch on the twin replica: the copy
+        completes one nominal service time from detection, superseding the
+        original (slow) completion event."""
+        b = self._inflight.get(bid)
+        if b is None or b.gen != 0:
+            return
+        st = self.pools[b.pool]
+        b.gen = 1
+        done = now + b.dur
+        if st.free:  # twin replica picks up the speculative copy
+            b.twin = st.free.pop()
+            st.busy_until[b.twin] = done
+        # with no twin free the re-issue borrows capacity, keeping the cap
+        # unconditional — the sequential engine's semantics exactly
+        # the straggling original is abandoned at the capped completion
+        st.busy_until[b.replica] = done
+        self.telemetry.record_reissue(b.pool)
+        if self.rt.trace:
+            for it in b.items:
+                self.trace[it.rid]["reissued_at"] = now
+        self.evq.push(done, BATCH_DONE, (bid, 1))
+
+    def _on_replica_fail(self, pool: str, idx: int, now: float) -> None:
+        """Injected outage: the replica accepts no new batches (in-flight
+        work finishes); the pool fails over to its surviving replicas."""
         st = self.pools[pool]
-        st.free.append(replica)
-        st.busy_until[replica] = now
-        for it in items:
+        st.failed.add(idx)
+        if idx in st.free:
+            st.free.remove(idx)
+        t_rec = self.cfg.fail_replica[3]
+        self.telemetry.record_failure(pool, recovers=bool(np.isfinite(t_rec)))
+
+    def _on_replica_recover(self, pool: str, idx: int, now: float) -> None:
+        st = self.pools[pool]
+        st.failed.discard(idx)
+        if st.busy_until[idx] <= now and idx not in st.free:
+            st.free.append(idx)
+        self._dispatch(pool, now)
+
+    # ------------------------------------------------------------------
+
+    def _on_batch_done(self, bid: int, gen: int, now: float) -> None:
+        b = self._inflight.get(bid)
+        if b is None or gen != b.gen:
+            return  # completion superseded by a straggler re-issue
+        del self._inflight[bid]
+        st = self.pools[b.pool]
+        for replica in (b.replica, b.twin):
+            if replica is None:
+                continue
+            st.busy_until[replica] = now
+            # a replica that failed mid-batch rejoins only on recovery
+            if replica not in st.failed:
+                st.free.append(replica)
+        for it in b.items:
             if it.phase == EDGE:
                 fam = ARMS[it.arm_idx].family
                 nbytes = self.transport.wire_bytes(fam)
                 tsec = self.transport.transfer_time(fam, it.req.rtt_ms)
-                self.telemetry.record_transfer(pool, nbytes)
+                self.telemetry.record_transfer(b.pool, nbytes)
                 if self.rt.trace:
                     tr = self.trace[it.rid]
                     tr["edge_done"] = now
@@ -274,7 +410,7 @@ class ContinuousRuntime:
                 self.evq.push(now + tsec, DEVICE_READY, it)
             else:
                 self._complete(it, now)
-        self._dispatch(pool, now)
+        self._dispatch(b.pool, now)
 
     def _on_device_ready(self, edge_item: WorkItem, now: float) -> None:
         pend = self.pending[edge_item.rid]
@@ -287,7 +423,7 @@ class ContinuousRuntime:
         self._dispatch(item.pool, now)
 
     def _complete(self, item: WorkItem, now: float) -> None:
-        from repro.serving.engine import Record, _pool_key, score_and_update
+        from repro.serving.engine import Record, score_and_update
 
         pend = self.pending.pop(item.rid)
         arm = ARMS[pend.arm_idx]
@@ -295,7 +431,7 @@ class ContinuousRuntime:
         q = self.transport.quality_delta(
             arm.family, self.qt[pend.req.rid, pend.arm_idx]
         )
-        l_dev = max(pend.occ[_pool_key(p)] for p in pools_used(arm))
+        l_dev = max(pend.occ[pool_key(p)] for p in pools_used(arm))
         r_report = score_and_update(
             self.policy, pend.arm_idx, pend.ctx, q, t_total, l_dev,
             dynamic_reward=self.dynamic_reward,

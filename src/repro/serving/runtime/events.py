@@ -2,7 +2,8 @@
 
 The runtime replaces the sequential per-request loop of ``ServingEngine``
 with an event-driven simulation: request arrivals, batch completions,
-latent-transfer completions and aggregator flush deadlines are all events
+latent-transfer completions, aggregator flush deadlines and fault
+injections (replica failure/recovery, straggler detection) are all events
 on a single monotone clock.  Ties are broken by insertion order so runs
 are fully deterministic for a given seed.
 """
@@ -21,6 +22,12 @@ ARRIVE = "arrive"
 BATCH_DONE = "batch_done"
 DEVICE_READY = "device_ready"
 FLUSH = "flush"
+# fault-tolerance events (sequential-engine parity): a replica dropping out
+# of / rejoining its pool, and the straggler detector tripping on an
+# in-flight batch (payload: batch id) to re-issue it on the twin replica
+REPLICA_FAIL = "replica_fail"
+REPLICA_RECOVER = "replica_recover"
+STRAGGLER = "straggler"
 
 EDGE = "edge"
 DEVICE = "device"

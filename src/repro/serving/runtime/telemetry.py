@@ -1,14 +1,43 @@
-"""Per-pool runtime telemetry: queue depth, batch occupancy, wire bytes.
+"""Per-pool runtime telemetry: queue depth, batch occupancy, wire bytes,
+fault counters (replica failures, straggler re-issues).
 
 Collected by the continuous-batching engine and summarized through
 ``repro.serving.metrics.export_runtime_telemetry`` for benchmarks and
 dashboards.  Everything is plain Python counters — telemetry must never
 perturb the simulated clock.
+
+:class:`FaultCounters` is shared with the sequential ``ServingEngine``:
+both runtimes expose it as ``engine.fault_counters`` and the differential
+parity suite (tests/test_runtime_parity.py) asserts the two agree for
+identical workloads and fault regimes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
+
+
+@dataclass
+class FaultCounters:
+    """Fault bookkeeping common to both runtimes.
+
+    Straggler counters are per *request* (not per batch) and derive from
+    the deterministic per-request draw in ``repro.serving.context`` —
+    that is what makes them comparable across runtimes whose batch
+    compositions differ."""
+
+    replica_failures: int = 0  # injected replica outages
+    replica_recoveries: int = 0  # outages that healed within the run
+    stragglers_injected: int = 0  # edge-phase requests slowed > 1×
+    stragglers_reissued: int = 0  # requests past the re-issue threshold
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "replica_failures": self.replica_failures,
+            "replica_recoveries": self.replica_recoveries,
+            "stragglers_injected": self.stragglers_injected,
+            "stragglers_reissued": self.stragglers_reissued,
+        }
 
 
 @dataclass
@@ -20,6 +49,8 @@ class PoolStats:
     bytes_out: int = 0  # latent handoff bytes leaving this pool
     busy_s: float = 0.0  # replica-seconds spent serving batches
     forced_flushes: int = 0  # sub-maximal batches dispatched at linger deadline
+    failures: int = 0  # replica outages injected on this pool
+    reissued_batches: int = 0  # batches re-issued on the twin replica
 
     @property
     def occupancy(self) -> float:
@@ -35,6 +66,7 @@ class PoolStats:
 class RuntimeTelemetry:
     def __init__(self):
         self.pools: Dict[str, PoolStats] = {}
+        self.faults = FaultCounters()
 
     def _pool(self, pool: str) -> PoolStats:
         return self.pools.setdefault(pool, PoolStats())
@@ -55,6 +87,20 @@ class RuntimeTelemetry:
     def record_transfer(self, pool: str, n_bytes: int) -> None:
         self._pool(pool).bytes_out += n_bytes
 
+    def record_failure(self, pool: str, recovers: bool) -> None:
+        self._pool(pool).failures += 1
+        self.faults.replica_failures += 1
+        if recovers:
+            self.faults.replica_recoveries += 1
+
+    def record_straggler(self, reissued: bool) -> None:
+        self.faults.stragglers_injected += 1
+        if reissued:
+            self.faults.stragglers_reissued += 1
+
+    def record_reissue(self, pool: str) -> None:
+        self._pool(pool).reissued_batches += 1
+
     def summary(self) -> Dict[str, dict]:
         out = {}
         for pool, p in sorted(self.pools.items()):
@@ -68,5 +114,7 @@ class RuntimeTelemetry:
                 "forced_flushes": p.forced_flushes,
                 "bytes_transferred": p.bytes_out,
                 "busy_s": p.busy_s,
+                "failures": p.failures,
+                "reissued_batches": p.reissued_batches,
             }
         return out

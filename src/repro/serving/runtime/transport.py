@@ -56,6 +56,16 @@ class HandoffTransport:
         self.cfg = cfg or TransportConfig()
         self._fidelity: Dict[str, float] = {}
 
+    @classmethod
+    def for_runtime(cls, rt_cfg) -> "HandoffTransport":
+        """Transport configured from a ``RuntimeConfig`` — the one place
+        that maps runtime knobs to transport knobs (the engine and the
+        parity suite's expected-quality model must agree on it)."""
+        return cls(TransportConfig(
+            compress=rt_cfg.compress_handoff, bw_mbps=rt_cfg.bw_mbps,
+            quality_sensitivity=rt_cfg.quality_sensitivity,
+        ))
+
     def wire_bytes(self, family: Optional[str]) -> int:
         return lat.latent_wire_bytes(family, compressed=self.cfg.compress)
 

@@ -1,0 +1,49 @@
+"""Regression guard for the continuous runtime's batch service-time model:
+the analytic ``t(b) = t1·(1 + growth·(b−1))`` must stay within tolerance
+of real ``Executor.generate_bucketed`` timings (calibrated by
+scripts/calibrate_batch_cost.py).  If batched execution ever stops being
+affine in the bucket size — e.g. a per-sample recompile sneaks in — the
+runtime's backlog estimates and throughput claims go stale; this test
+catches that drift."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "scripts"))
+
+from calibrate_batch_cost import calibrate, fit_growth  # noqa: E402
+
+pytestmark = pytest.mark.slow  # compiles 4 bucket programs × 3 arms
+
+
+def test_fit_growth_recovers_exact_affine():
+    buckets = (1, 2, 4, 8)
+    t1, g = 0.05, 0.3
+    times = [t1 * (1 + g * (b - 1)) for b in buckets]
+    t1_hat, g_hat = fit_growth(buckets, times)
+    assert t1_hat == pytest.approx(t1, rel=1e-9)
+    assert g_hat == pytest.approx(g, rel=1e-9)
+
+
+def test_analytic_model_within_tolerance_of_calibrated_curve():
+    # calibrate on the relay arms: edge-pool micro-batches are where
+    # batch_cost_growth drives the runtime's backlog/throughput model (the
+    # tiny standalone arm is dispatch-overhead-dominated at test scale and
+    # carries no batching signal)
+    cal = calibrate(arm_indices=(2, 8))
+    assert set(cal["arms"]) and cal["buckets"] == [1, 2, 4, 8]
+    for label, rec in cal["arms"].items():
+        # measured service time must grow with the bucket (batch costs
+        # more in total) while the affine model amortizes per item
+        assert rec["t1_s"] > 0, label
+        assert rec["measured_s"][-1] > rec["measured_s"][0], (label, rec)
+        # the affine fit explains the measured curve: every bucket's model
+        # prediction within 75 % of its measurement — generous because CI
+        # timing noise is multiplicative here, but far below the >>1×
+        # residuals a superlinear (e.g. recompile-per-call) curve produces
+        assert rec["max_rel_residual"] < 0.75, (label, rec)
+        # growth must be a genuine amortization coefficient, not degenerate
+        assert -0.05 <= rec["growth"] < 1.5, (label, rec)
+    assert np.isfinite(cal["growth_pooled"])

@@ -1,0 +1,168 @@
+"""Differential parity harness: the sequential ServingEngine and the
+continuous runtime replay *identical* seeded workloads (including failure
+and straggler injection) and must agree on everything scheduler-visible —
+per-request arm decisions, per-request quality (modulo the modeled
+compression delta), and fault counters.
+
+This is the lock that lets ``runtime="continuous"`` be the default: any
+drift in the shared serving context (occupancy aggregation, backlog
+horizon, straggler draws) or in the fault model shows up here as a
+counter or decision mismatch, not as a silent scheduling regression.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policies import RisePolicy
+from repro.serving.arms import ARMS, N_ARMS
+from repro.serving.context import context_dim
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.runtime import HandoffTransport, RuntimeConfig, TransportConfig
+from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+# fault regimes: the degraded-edge conditions RISE's scheduler targets
+REGIMES = {
+    "clean": {},
+    "stragglers": dict(straggler_prob=0.3, straggler_factor=8.0),
+    "replica_failure": dict(fail_replica=("sdxl", 0, 50.0, 400.0)),
+    "degraded": dict(
+        straggler_prob=0.25, straggler_factor=6.0,
+        fail_replica=("sd3l", 1, 30.0, 300.0),
+    ),
+}
+
+
+def _run(cfg, reqs, qt, runtime, compress):
+    rt_cfg = RuntimeConfig(compress_handoff=compress) \
+        if runtime == "continuous" else None
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime=runtime,
+                        runtime_cfg=rt_cfg)
+    recs = eng.run(reqs)
+    return eng, {r.rid: r for r in recs}
+
+
+@pytest.mark.parametrize("compress", [True, False], ids=["int8", "raw"])
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_runtime_parity(regime, compress):
+    cfg = SimConfig(n_requests=120, mean_interarrival=1.5, seed=11,
+                    **REGIMES[regime])
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+
+    eng_seq, rec_seq = _run(cfg, reqs, qt, "sequential", compress)
+    eng_cont, rec_cont = _run(cfg, reqs, qt, "continuous", compress)
+
+    # every request completes in both runtimes, under faults too
+    rids = {r.rid for r in reqs}
+    assert set(rec_seq) == rids and set(rec_cont) == rids
+
+    # identical per-request arm decisions
+    assert [rec_seq[i].arm for i in sorted(rids)] == \
+        [rec_cont[i].arm for i in sorted(rids)]
+
+    # per-request quality: sequential reports the table entry verbatim;
+    # continuous applies exactly the transport's modeled compression delta
+    transport = HandoffTransport(TransportConfig(compress=compress))
+    for i in sorted(rids):
+        arm = ARMS[rec_seq[i].arm]
+        assert rec_seq[i].quality == qt[i, arm.idx]
+        expected = transport.quality_delta(arm.family, qt[i, arm.idx])
+        assert rec_cont[i].quality == pytest.approx(expected)
+
+    # fault counters agree exactly (request-intrinsic straggler draws)
+    assert eng_seq.fault_counters.as_dict() == \
+        eng_cont.fault_counters.as_dict()
+
+    fc = eng_cont.fault_counters
+    if "straggler_prob" in REGIMES[regime]:
+        assert fc.stragglers_injected > 0
+        # factor 6–8 ≫ reissue threshold 2.5: every straggler re-issues
+        assert fc.stragglers_reissued == fc.stragglers_injected
+    else:
+        assert fc.stragglers_injected == fc.stragglers_reissued == 0
+    if "fail_replica" in REGIMES[regime]:
+        assert fc.replica_failures == 1 and fc.replica_recoveries == 1
+    else:
+        assert fc.replica_failures == fc.replica_recoveries == 0
+
+
+def test_continuous_is_default_runtime():
+    eng = ServingEngine(CyclePolicy(), None, SimConfig())
+    assert eng.runtime == "continuous"
+    fallback = ServingEngine(CyclePolicy(), None, SimConfig(),
+                             runtime="sequential")
+    assert fallback.runtime == "sequential"
+
+
+def test_straggler_reissue_caps_latency_continuous():
+    """The discrete-event re-issue path bounds a straggling batch at
+    reissue × expected: runs with factor ≫ threshold must not be slower
+    than the threshold itself would allow."""
+    def p95(**fault_kw):
+        cfg = SimConfig(n_requests=150, mean_interarrival=2.0, seed=7,
+                        **fault_kw)
+        reqs = make_requests(cfg)
+        qt = synthetic_quality_table(reqs)
+        eng = ServingEngine(CyclePolicy(), qt, cfg)
+        recs = eng.run(reqs)
+        return float(np.percentile([r.t_total for r in recs], 95))
+
+    base = p95()
+    capped = p95(straggler_prob=0.3, straggler_factor=50.0)
+    mild = p95(straggler_prob=0.3, straggler_factor=2.5)
+    # factor 50 with re-issue behaves like factor 2.5 (the cap), far from 50×
+    assert capped < base * 6
+    assert capped == pytest.approx(mild, rel=0.35)
+
+
+def test_replica_failure_shifts_load_to_twin():
+    """During an sdxl outage the surviving replica carries the pool: all
+    requests still finish and the pool records the injected failure."""
+    cfg = SimConfig(n_requests=100, mean_interarrival=1.0, seed=5,
+                    fail_replica=("sdxl", 1, 20.0, np.inf))
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    eng = ServingEngine(CyclePolicy(), qt, cfg)
+    recs = eng.run(reqs)
+    assert len(recs) == len(reqs)
+    assert eng.telemetry.pools["sdxl"].failures == 1
+    # the replica never recovers → a failure but no recovery counted
+    assert eng.fault_counters.replica_failures == 1
+    assert eng.fault_counters.replica_recoveries == 0
+
+
+def test_telemetry_context_features():
+    """With telemetry_context on, both runtimes hand the policy a
+    context_dim-sized vector whose tail features are valid [0,1] signals,
+    and LinUCB runs on the wider context end-to-end."""
+
+    class Spy(CyclePolicy):
+        def __init__(self):
+            super().__init__()
+            self.ctxs = []
+
+        def select(self, ctx, avail):
+            self.ctxs.append(np.array(ctx))
+            return super().select(ctx, avail)
+
+    d = context_dim(telemetry_context=True)
+    assert d == 10
+    for runtime in ("sequential", "continuous"):
+        cfg = SimConfig(n_requests=60, mean_interarrival=1.0, seed=2,
+                        telemetry_context=True)
+        reqs = make_requests(cfg)
+        qt = synthetic_quality_table(reqs)
+        spy = Spy()
+        ServingEngine(spy, qt, cfg, runtime=runtime).run(reqs)
+        assert all(c.shape == (d,) for c in spy.ctxs)
+        tail = np.array([c[8:] for c in spy.ctxs])
+        assert np.all(tail >= 0.0) and np.all(tail <= 1.0)
+        # under sustained load the queue-depth feature must actually move
+        if runtime == "continuous":
+            assert tail[:, 0].max() > 0.0
+
+    cfg = SimConfig(n_requests=40, mean_interarrival=1.0, seed=2,
+                    telemetry_context=True)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    recs = ServingEngine(RisePolicy(seed=0, ctx_dim=d), qt, cfg).run(reqs)
+    assert len(recs) == 40 and all(np.isfinite(r.reward) for r in recs)
