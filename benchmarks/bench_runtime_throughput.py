@@ -1,8 +1,10 @@
 """Continuous-batching runtime vs sequential engine: simulated throughput
 and tail latency across arrival rates, the compressed-handoff
-bytes-on-wire ledger, and a degraded-edge ("faulty") regime with a
-replica outage plus heavy stragglers — the failure-prone heavy-traffic
-conditions RISE's online scheduler targets.
+bytes-on-wire ledger, a degraded-edge ("faulty") regime with a replica
+outage plus heavy stragglers, and a straggler-heavy regime comparing
+per-item re-issue (partial-batch re-execution) against whole-batch
+re-issue — the failure-prone heavy-traffic conditions RISE's online
+scheduler targets.
 
 Both engines replay the same Poisson request stream through a deterministic
 cycling policy, so the per-request arm decisions are *identical* — the only
@@ -122,6 +124,55 @@ def run(quick: bool = False):
     for r in (fseq, fcont):
         r.pop("arms")
     out["faulty"] = {"sequential": fseq, "continuous": fcont}
+
+    # straggler-heavy regime: per-item re-issue (partial-batch re-execution
+    # on the twin replica) vs whole-batch re-issue.  Same requests, same
+    # decisions, same quality tables and same injected/re-issued straggler
+    # counts — the only difference is whether a lagging micro-batch drags
+    # its healthy co-batched samples through the re-issue cap.
+    scfg = dict(
+        n_requests=n, mean_interarrival=1.0, seed=3,
+        straggler_prob=0.35, straggler_factor=10.0,
+    )
+    sruns = {}
+    for mode in ("item", "batch"):
+        cfg = SimConfig(straggler_mode=mode, **scfg)
+        reqs = make_requests(cfg)
+        qt = synthetic_quality_table(reqs)
+        sruns[mode] = run_one(reqs, qt, cfg, "continuous")
+    item, batch = sruns["item"], sruns["batch"]
+    assert item["arms"] == batch["arms"], "arm decisions diverged (straggler)"
+    ki = {k: v for k, v in item["fault_counters"].items()
+          if k.startswith("stragglers")}
+    kb = {k: v for k, v in batch["fault_counters"].items()
+          if k.startswith("stragglers")}
+    assert ki == kb, "straggler injection diverged across modes"
+    assert item["total_reward"] >= batch["total_reward"], \
+        "per-item re-issue should not lose reward"
+    assert item["p95_latency_s"] < batch["p95_latency_s"], \
+        "per-item re-issue must improve p95 over whole-batch"
+    reissued_items = {
+        m: sum(v.get("reissued_items", 0) for v in r["telemetry"].values())
+        for m, r in sruns.items()
+    }
+    emit(
+        "runtime_straggler_reissue_modes",
+        1e6 * item["sim_wall_s"] / n,
+        f"item_p95={item['p95_latency_s']:.1f}s;"
+        f"batch_p95={batch['p95_latency_s']:.1f}s;"
+        f"p95_win={batch['p95_latency_s'] / item['p95_latency_s']:.2f}x;"
+        f"item_mean={item['mean_latency_s']:.1f}s;"
+        f"batch_mean={batch['mean_latency_s']:.1f}s;"
+        f"reissued={item['fault_counters']['stragglers_reissued']};"
+        f"items_rerun_item={reissued_items['item']};"
+        f"items_rerun_batch={reissued_items['batch']}",
+    )
+    for r in (item, batch):
+        r.pop("arms")
+    out["straggler_heavy"] = {
+        "per_item": item, "whole_batch": batch,
+        "p95_win": batch["p95_latency_s"] / item["p95_latency_s"],
+    }
     save_json("bench_runtime_throughput", out)
     return out
 

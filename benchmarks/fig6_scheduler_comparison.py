@@ -114,5 +114,78 @@ def run(quick: bool = False):
     return out
 
 
+def telemetry_context_sweep(quick: bool = False, heavy_mu: float = 1.5):
+    """ROADMAP experiment: does ``telemetry_context=True`` (live queue depth
+    + batch occupancy appended to the LinUCB context) improve RISE reward
+    under heavy mixed traffic?
+
+    Fig. 6 protocol, RISE arm only, with the arrival rate pushed into the
+    congested regime (``heavy_mu`` ≪ the paper's μ = 9 s): both variants
+    train offline on the same workload/quality tables and replay the same
+    held-out test stream — only the context width differs.  Offline
+    contexts for the wide variant carry neutral telemetry features (queue
+    depth 0, occupancy 1): the offline replay has no live runtime, so the
+    bandit meets the real signals online."""
+    from repro.serving.context import context_dim, telemetry_features
+
+    fams = get_families()
+    ex = Executor(fams)
+    n_train, n_test = (60, 60) if quick else (150, 150)
+
+    train_cfg = SimConfig(n_requests=n_train, mean_interarrival=heavy_mu,
+                          seed=10)
+    train_reqs = make_requests(train_cfg, seed0=50_000)
+    test_reqs = make_requests(
+        SimConfig(n_requests=n_test, mean_interarrival=heavy_mu, seed=20),
+        seed0=90_000,
+    )
+    print("# computing quality tables (train/test × 11 arms)...")
+    train_qt = ex.quality_table(np.array([r.prompt_seed for r in train_reqs]))
+    test_qt = ex.quality_table(np.array([r.prompt_seed for r in test_reqs]))
+    test_reqs_byid = sorted(test_reqs, key=lambda r: r.rid)
+
+    ctxs, reward_fn = offline_train_data(train_reqs, train_qt)
+    neutral = telemetry_features(0.0, 1.0)
+    out = {}
+    for tc in (False, True):
+        rise = pol.RisePolicy(seed=0, ctx_dim=context_dim(tc))
+        rng = np.random.default_rng(5)
+        for i in rng.permutation(len(ctxs)):
+            c = np.concatenate([ctxs[i], neutral]) if tc else ctxs[i]
+            arm = rise.select(c, np.ones(N_ARMS, bool))
+            rise.update(c, arm, reward_fn(i, arm))
+        cfg = SimConfig(n_requests=n_test, mean_interarrival=heavy_mu,
+                        seed=20, telemetry_context=tc)
+        eng = ServingEngine(rise, test_qt, cfg, executor=ex)
+        s = summarize(eng.run(test_reqs_byid))
+        key = "telemetry_context" if tc else "baseline"
+        out[key] = s
+        emit(
+            f"fig6_telemetry_ctx_{key}", 0.0,
+            f"total_reward={s['total_reward']:.3f};"
+            f"quality_reward={s['quality_reward']:.3f};"
+            f"mean_lat={s['mean_latency_s']:.2f}s;"
+            f"p95={s['p95_latency_s']:.2f}s",
+        )
+    gain = (out["telemetry_context"]["total_reward"]
+            - out["baseline"]["total_reward"])
+    dlat = (out["telemetry_context"]["mean_latency_s"]
+            - out["baseline"]["mean_latency_s"])
+    out["_meta"] = {
+        "heavy_mu": heavy_mu, "n_train": n_train, "n_test": n_test,
+        "reward_gain": gain, "mean_latency_delta_s": dlat,
+    }
+    emit("fig6_telemetry_ctx_gain", 0.0,
+         f"reward_gain={gain:+.4f};mean_latency_delta={dlat:+.2f}s;"
+         f"heavy_mu={heavy_mu}")
+    save_json("fig6_telemetry_context_sweep", out)
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if "--telemetry-sweep" in sys.argv:
+        telemetry_context_sweep(quick="--quick" in sys.argv)
+    else:
+        run(quick="--quick" in sys.argv)

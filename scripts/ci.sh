@@ -9,25 +9,40 @@
 # subprocess dry-runs, reduced-model forwards) so the 6-minute full suite is
 # not the only signal.  The full tier-1 run carries a known-failing seed
 # baseline (scripts/known_failures.txt, recorded in ROADMAP.md "Open
-# items"), so the gate fails only on failures OUTSIDE that baseline.
+# items"), so the gate fails only on failures OUTSIDE that baseline — and
+# it fails HARD when a baseline entry starts passing, so stale entries
+# cannot linger.
+#
+# Every pytest invocation writes JUnit XML under $JUNIT_DIR (default
+# results/junit/) — .github/workflows/ci.yml uploads these as artifacts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+JUNIT_DIR="${JUNIT_DIR:-results/junit}"
+mkdir -p "$JUNIT_DIR"
+
 echo "== runtime parity (differential: sequential vs continuous) =="
 # the lock on the default continuous runtime: identical arm decisions,
-# quality and fault counters across runtimes, under fault injection too
-python -m pytest -q tests/test_runtime_parity.py
+# quality and fault counters across runtimes, under fault injection and
+# both straggler mitigation modes (per-item / whole-batch re-issue)
+python -m pytest -q --junitxml "$JUNIT_DIR/parity.xml" \
+    tests/test_runtime_parity.py
 
 echo "== fast smoke (-m 'not slow') =="
 # parity suite already ran above as its own hard gate — don't repeat it
-python -m pytest -q -m "not slow" --ignore tests/test_runtime_parity.py
+python -m pytest -q -m "not slow" --junitxml "$JUNIT_DIR/fast.xml" \
+    --ignore tests/test_runtime_parity.py
 
 if [ "${1:-full}" = "full" ]; then
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
     out="$(mktemp)"
     set +e
-    python -m pytest -q --tb=no | tee "$out"
+    # -rfE: force a short-summary line per failure/error — the triage below
+    # parses those lines, and some pytest/verbosity combinations would
+    # otherwise collapse the ERRORS report entirely under --tb=no
+    python -m pytest -q -rfE --tb=no --junitxml "$JUNIT_DIR/full.xml" \
+        | tee "$out"
     rc=${PIPESTATUS[0]}
     set -e
     # exit code 1 = "tests failed" (triaged against the baseline below);
@@ -37,18 +52,36 @@ if [ "${1:-full}" = "full" ]; then
         echo "pytest aborted (exit $rc)"
         exit 1
     fi
-    # collection/setup ERRORs count as failures too — they name the module
-    awk '/^(FAILED|ERROR)/ {print $2}' "$out" | sort > "$out.failed"
+    # collection/setup ERRORs count as failures too — short-summary lines
+    # name the failing test id (or the module, for collection errors)
+    awk '/^(FAILED|ERROR) / {print $2}' "$out" | sort -u > "$out.failed"
+    # cross-check: if pytest's tail count line reports errors that produced
+    # no parseable ERROR summary line (collapsed ERRORS format), the triage
+    # below would silently miss them — fail instead of guessing
+    n_errors="$(tail -n 1 "$out" | grep -Eo '[0-9]+ errors?' \
+        | grep -Eo '[0-9]+' | head -1 || true)"
+    n_triaged="$(grep -c '^ERROR ' "$out" || true)"
+    if [ "${n_errors:-0}" -gt 0 ] && [ "${n_triaged:-0}" -eq 0 ]; then
+        echo "pytest reported ${n_errors} error(s) but none appeared in the"
+        echo "short summary — cannot triage against the baseline; failing."
+        exit 1
+    fi
     new_failures="$(comm -23 "$out.failed" <(sort scripts/known_failures.txt))"
     fixed="$(comm -13 "$out.failed" <(sort scripts/known_failures.txt))"
+    status=0
     if [ -n "$fixed" ]; then
-        echo "baseline tests now passing (prune known_failures.txt):"
+        echo "STALE baseline entries — these now pass; prune them from"
+        echo "scripts/known_failures.txt (and ROADMAP.md) to keep the gate honest:"
         echo "$fixed"
+        status=1
     fi
     if [ -n "$new_failures" ]; then
         echo "NEW failures beyond the known baseline:"
         echo "$new_failures"
-        exit 1
+        status=1
+    fi
+    if [ "$status" -ne 0 ]; then
+        exit "$status"
     fi
     echo "tier-1 OK: no failures beyond scripts/known_failures.txt"
 fi

@@ -53,6 +53,17 @@ def main(argv=None):
     ap.add_argument("--telemetry-context", action="store_true",
                     help="append live runtime telemetry (queue depth, batch "
                          "occupancy) to the LinUCB context vector")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="fraction of edge-phase requests slowed by the "
+                         "straggler model")
+    ap.add_argument("--straggler-factor", type=float, default=6.0,
+                    help="slowdown multiplier of a straggling request")
+    ap.add_argument("--straggler-mode", default="item",
+                    choices=["item", "batch"],
+                    help="mitigation: 'item' (default) re-runs only the "
+                         "straggling samples on the twin replica "
+                         "(partial-batch re-execution); 'batch' re-issues "
+                         "the whole micro-batch")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
     if args.telemetry_context and args.policy in ("ppo", "sac"):
@@ -72,7 +83,10 @@ def main(argv=None):
     ex = Executor(fams)
 
     cfg = SimConfig(n_requests=args.requests, mean_interarrival=args.mu,
-                    seed=args.seed, telemetry_context=args.telemetry_context)
+                    seed=args.seed, telemetry_context=args.telemetry_context,
+                    straggler_prob=args.straggler_prob,
+                    straggler_factor=args.straggler_factor,
+                    straggler_mode=args.straggler_mode)
     reqs = make_requests(cfg)
     seeds = np.array([r.prompt_seed for r in reqs])
     print(f"precomputing quality table for {len(reqs)} requests × 11 arms...")

@@ -23,7 +23,7 @@ and batch occupancy) appended to the LinUCB context vector when
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Tuple
+from typing import Dict, Iterable, List, Mapping, Tuple
 
 import numpy as np
 
@@ -67,6 +67,25 @@ def backlog_horizon(cfg) -> float:
     return cfg.max_queue * BACKLOG_SECONDS_PER_SLOT
 
 
+#: straggler mitigation modes: "item" re-issues only the straggling samples
+#: of a lagging micro-batch as a twin-replica sub-batch (partial-batch
+#: re-execution via ``Executor.generate_bucketed(..., subset=...)``);
+#: "batch" re-issues the whole micro-batch, capping every member at
+#: ``straggler_reissue ×`` expected (the pre-partial-re-execution model).
+STRAGGLER_MODES = ("item", "batch")
+
+
+def straggler_mode(cfg) -> str:
+    """Validated straggler mitigation mode of a SimConfig — the one
+    accessor both engines use, so an unknown mode fails loudly in either."""
+    mode = getattr(cfg, "straggler_mode", "item")
+    if mode not in STRAGGLER_MODES:
+        raise ValueError(
+            f"unknown straggler_mode {mode!r}; expected one of {STRAGGLER_MODES}"
+        )
+    return mode
+
+
 def straggler_slow(cfg, rid: int) -> float:
     """Per-request straggler slowdown factor (≥ 1).
 
@@ -78,6 +97,34 @@ def straggler_slow(cfg, rid: int) -> float:
         return 1.0
     u = np.random.default_rng([int(cfg.seed), int(rid), 0x57A6]).uniform()
     return float(cfg.straggler_factor) if u < cfg.straggler_prob else 1.0
+
+
+def partition_stragglers(
+    cfg, rids: Iterable[int]
+) -> Tuple[float, List[int], Dict[int, float]]:
+    """Split a dispatched edge-phase batch by its members' request-intrinsic
+    straggler draws: ``(kept_slow, reissue_rids, draws)``.
+
+    ``reissue_rids`` are the members whose draw trips the re-issue detector
+    (slow > ``straggler_reissue``) — under per-item mitigation exactly these
+    re-run on the twin replica as a sub-batch; ``kept_slow`` is the max
+    slowdown among the remaining members (the batch still moves at the pace
+    of its slowest *kept* sample).  Under whole-batch mitigation callers
+    fold the tripped members back in (the entire batch re-issues).
+    ``draws`` carries every member's slowdown so callers account injected
+    stragglers without re-deriving the per-request RNG.
+
+    Shared by both engines (the sequential engine passes its singleton
+    "batch") so the kept/re-issued split — and therefore the fault
+    counters — is identical by construction."""
+    kept_slow, reissue, draws = 1.0, [], {}
+    for rid in rids:
+        s = draws[rid] = straggler_slow(cfg, rid)
+        if s > cfg.straggler_reissue:
+            reissue.append(rid)
+        else:
+            kept_slow = max(kept_slow, s)
+    return kept_slow, reissue, draws
 
 
 def context_dim(telemetry_context: bool = False) -> int:

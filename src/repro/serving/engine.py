@@ -18,8 +18,8 @@ from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
-                                   pool_key, straggler_slow,
-                                   telemetry_features)
+                                   partition_stragglers, pool_key,
+                                   straggler_mode, telemetry_features)
 from repro.serving.runtime.telemetry import FaultCounters
 
 
@@ -33,6 +33,11 @@ class SimConfig:
     straggler_factor: float = 1.0  # >1 → random slowdowns; engine re-issues
     straggler_prob: float = 0.0
     straggler_reissue: float = 2.5  # re-issue if slower than this × expected
+    # mitigation mode (serving.context.STRAGGLER_MODES): "item" re-runs only
+    # the straggling samples of a lagging micro-batch on the twin replica
+    # (partial-batch re-execution, the default); "batch" re-issues the whole
+    # micro-batch, taxing healthy co-batched requests with the full cap
+    straggler_mode: str = "item"
     # append live runtime telemetry (queue depth, batch occupancy) to the
     # LinUCB context vector — size policies with serving.context.context_dim
     telemetry_context: bool = False
@@ -201,6 +206,7 @@ class ServingEngine:
             self.fault_counters = rt.fault_counters
             return records
         pools = Pools(self.cfg)
+        per_item = straggler_mode(self.cfg) == "item"  # validates the mode
         fc = self.fault_counters = FaultCounters()
         if self.cfg.fail_replica is not None:
             fc.replica_failures = 1
@@ -221,16 +227,24 @@ class ServingEngine:
             plan = self.executor.plan(arm) if self.executor else _static_plan(arm)
             lb = lat.arm_latency(arm, plan, req.rtt_ms, rng=self.rng)
 
-            # straggler injection + mitigation (re-issue on the twin
-            # replica caps the slowdown at straggler_reissue × expected);
-            # the draw is request-intrinsic so the continuous runtime's
-            # fault counters match ours for the same workload
-            slow = straggler_slow(self.cfg, req.rid)
-            if slow > 1.0 and arm.edge_pool is not None:
-                fc.stragglers_injected += 1
-                if slow > self.cfg.straggler_reissue:
-                    fc.stragglers_reissued += 1
-            edge_dur = lb.edge_s * min(slow, self.cfg.straggler_reissue)
+            # straggler injection + mitigation: this engine's batches are
+            # singletons, so per-item and whole-batch re-issue coincide —
+            # detection at (reissue−1)× plus one singleton re-run lands at
+            # the reissue× cap (lat.reissue_latency).  The split comes from
+            # the same shared partition the continuous runtime uses on its
+            # micro-batches, so fault counters match it for the same
+            # workload in either mitigation mode.
+            kept_slow, tripped, draws = partition_stragglers(
+                self.cfg, [req.rid]
+            )
+            if tripped:
+                edge_dur = lat.reissue_latency(
+                    lb.edge_s, self.cfg.straggler_reissue
+                )
+            else:
+                edge_dur = lb.edge_s * kept_slow
+            if draws[req.rid] > 1.0 and arm.edge_pool is not None:
+                fc.note_straggler(bool(tripped), per_item=per_item)
 
             if arm.edge_pool is not None:
                 edge_done = pools.acquire(arm.edge_pool, now, edge_dur)

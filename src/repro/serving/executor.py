@@ -93,16 +93,29 @@ class Executor:
         return self._gen_fns[cache_key]
 
     def generate_bucketed(self, arm: Arm, seeds: np.ndarray,
-                          buckets=(1, 2, 4, 8)) -> np.ndarray:
+                          buckets=(1, 2, 4, 8), subset=None) -> np.ndarray:
         """Pad-to-bucket batched generation: the runtime aggregator's
         contract that each arm compiles at most ``len(buckets)`` programs
         regardless of micro-batch size.  Per-sample PRNG keys (folded from
         each seed) make every sample's output identical whichever bucket
         its micro-batch lands in; padded slots re-run the last seed and
-        are sliced off."""
+        are sliced off.
+
+        ``subset`` — optional indices into ``seeds``: partial-batch
+        re-execution, the straggler re-issue path.  Only the selected
+        samples re-run (padded to their own, usually smaller, bucket), and
+        because seeding is per-key the returned rows are bit-identical to
+        the corresponding rows of the full call — a twin replica can
+        re-run just a micro-batch's stragglers without perturbing their
+        outputs."""
         from repro.serving.runtime.batching import bucketize
 
         seeds = np.asarray(seeds)
+        if subset is not None:
+            idx = np.asarray(subset, dtype=np.intp)
+            if idx.size == 0:
+                raise ValueError("empty subset: nothing to re-execute")
+            seeds = seeds[idx]
         n = len(seeds)
         b = bucketize(n, tuple(sorted(buckets)))
         if b > n:

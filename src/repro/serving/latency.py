@@ -88,6 +88,27 @@ def arm_latency(arm: Arm, plan: Optional[RelayPlan], rtt_ms: float,
     )
 
 
+def batch_service_time(pool: str, steps: int, batch: int,
+                       growth: float) -> float:
+    """Nominal service time of a padded micro-batch:
+    ``t(b) = steps · step_cost · (1 + growth·(b−1))`` — denoising at moderate
+    batch sizes amortizes weight streaming, so per-item cost shrinks toward
+    ``growth · t₁`` (calibrated by ``scripts/calibrate_batch_cost.py``)."""
+    return steps * STEP_COST[pool] * (1.0 + growth * (batch - 1))
+
+
+def reissue_latency(nominal_s: float, reissue: float) -> float:
+    """Dispatch-to-completion latency of a straggling batch mitigated by
+    twin re-issue of the same shape: the detector trips once the batch has
+    exceeded ``(reissue − 1) ×`` its nominal service time, then the
+    re-issued copy needs one more nominal service time on the twin — the
+    ``reissue ×`` cap (the sequential engine's singleton-batch semantics,
+    and the continuous runtime's whole-batch mode).  Per-item re-issue
+    re-runs only the straggling samples at their own, smaller,
+    :func:`batch_service_time`, so its completion lands under this cap."""
+    return nominal_s * max(reissue - 1.0, 0.0) + nominal_s
+
+
 def full_model_latency(pool: str) -> float:
     return STEP_COST[pool] * T_FULL[pool]
 

@@ -6,7 +6,8 @@ from repro.serving.runtime.batching import (BatchKey, MicroBatchAggregator,
 from repro.serving.runtime.engine import ContinuousRuntime, RuntimeConfig
 from repro.serving.runtime.events import (DEVICE, EDGE, REPLICA_FAIL,
                                           REPLICA_RECOVER, STRAGGLER,
-                                          EventQueue, WorkItem)
+                                          STRAGGLER_PARTIAL, EventQueue,
+                                          WorkItem)
 from repro.serving.runtime.telemetry import FaultCounters, RuntimeTelemetry
 from repro.serving.runtime.transport import (HandoffTransport, TransportConfig,
                                              channelwise_roundtrip)
@@ -15,6 +16,7 @@ __all__ = [
     "BatchKey", "MicroBatchAggregator", "batch_key_for", "bucketize",
     "ContinuousRuntime", "RuntimeConfig", "EventQueue", "WorkItem",
     "EDGE", "DEVICE", "REPLICA_FAIL", "REPLICA_RECOVER", "STRAGGLER",
-    "FaultCounters", "RuntimeTelemetry", "HandoffTransport",
+    "STRAGGLER_PARTIAL", "FaultCounters", "RuntimeTelemetry",
+    "HandoffTransport",
     "TransportConfig", "channelwise_roundtrip",
 ]

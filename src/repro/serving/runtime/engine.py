@@ -22,12 +22,17 @@ event-driven engine built for sustained mixed Poisson traffic:
 * **Fault tolerance** (sequential-engine parity) — replica failure
   injection as REPLICA_FAIL / REPLICA_RECOVER events: a failed replica
   accepts no new batches (in-flight work finishes) and its pool fails
-  over to the surviving twin; stragglers are detected as discrete
-  STRAGGLER events that re-issue the lagging batch on a free twin
-  replica, capping its completion at ``straggler_reissue ×`` the expected
-  service time — the same cap the sequential engine applies inline.
-  Straggler draws are request-intrinsic (``serving.context.straggler_slow``)
-  so fault counters match the sequential engine's exactly.
+  over to the surviving twin.  Straggler mitigation follows
+  ``SimConfig.straggler_mode``: under ``"item"`` (the default) the
+  detector fires a STRAGGLER_PARTIAL event that re-runs *only* the
+  straggling samples on the twin as a sub-batch — the Executor's
+  partial-batch re-execution path (``generate_bucketed(..., subset=...)``)
+  padded to its own smaller bucket — while the kept samples complete at
+  their own pace; under ``"batch"`` a STRAGGLER event re-issues the whole
+  lagging batch, capping every member at ``straggler_reissue ×`` the
+  expected service time.  Straggler draws are request-intrinsic
+  (``serving.context.straggler_slow``) so fault counters match the
+  sequential engine's exactly in either mode.
 
 Rewards, contexts and records are bit-compatible with the sequential
 engine (`repro.serving.engine.Record`), so `summarize()` and the Fig. 6 /
@@ -53,13 +58,13 @@ from repro.core.context import Request, context_vector
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
-                                   pool_key, straggler_slow,
-                                   telemetry_features)
+                                   partition_stragglers, pool_key,
+                                   straggler_mode, telemetry_features)
 
-from .batching import DEFAULT_BUCKETS, MicroBatchAggregator
+from .batching import DEFAULT_BUCKETS, MicroBatchAggregator, bucketize
 from .events import (ARRIVE, BATCH_DONE, DEVICE, DEVICE_READY, EDGE, FLUSH,
-                     REPLICA_FAIL, REPLICA_RECOVER, STRAGGLER, EventQueue,
-                     WorkItem)
+                     REPLICA_FAIL, REPLICA_RECOVER, STRAGGLER,
+                     STRAGGLER_PARTIAL, EventQueue, WorkItem)
 from .telemetry import RuntimeTelemetry
 from .transport import HandoffTransport
 
@@ -102,10 +107,12 @@ class _Pending:
 @dataclass
 class _Batch:
     """In-flight batch bookkeeping: supports straggler re-issue (the
-    original completion event is superseded by bumping ``gen``)."""
+    original completion event is superseded by bumping ``gen``).  A
+    pre-staged partial re-issue sub-batch starts with ``replica=None`` —
+    it acquires its twin replica only when STRAGGLER_PARTIAL fires."""
 
     pool: str
-    replica: int
+    replica: Optional[int]
     items: List[WorkItem]
     start: float
     dur: float  # nominal (straggler-free) service time incl. jitter
@@ -224,6 +231,8 @@ class ContinuousRuntime:
                 self._dispatch(payload, now)
             elif kind == STRAGGLER:
                 self._on_straggler(payload, now)
+            elif kind == STRAGGLER_PARTIAL:
+                self._on_straggler_partial(payload, now)
             elif kind == REPLICA_FAIL:
                 self._on_replica_fail(*payload, now=now)
             elif kind == REPLICA_RECOVER:
@@ -272,29 +281,39 @@ class ContinuousRuntime:
         self._dispatch(item.pool, now)
 
     def _batch_duration(self, pool: str, steps: int, bucket: int) -> float:
-        base = steps * lat.STEP_COST[pool] * (
-            1.0 + self.rt.batch_cost_growth * (bucket - 1)
+        base = lat.batch_service_time(
+            pool, steps, bucket, self.rt.batch_cost_growth
         )
         jitter = float(np.clip(self.rng.normal(1.0, 0.03), 0.9, 1.15))
         return base * jitter
 
-    def _batch_slowdown(self, items: List[WorkItem]) -> float:
-        """Straggler slowdown of a dispatched batch: the max over its
-        members' request-intrinsic draws (a batch moves at the pace of its
-        slowest sample).  Stragglers hit edge-phase work only, mirroring
-        the sequential engine (which slows lb.edge_s and leaves device
-        phases alone).  Counters are per request so they match the
-        sequential engine's bookkeeping exactly."""
+    def _straggler_plan(self, items: List[WorkItem]
+                        ) -> Tuple[float, List[WorkItem]]:
+        """Straggler draws for a dispatched batch → ``(slow, reissue_items)``.
+
+        ``slow`` is the batch's slowdown (max over the members it keeps — a
+        batch moves at the pace of its slowest sample); ``reissue_items``
+        are the members to split off for per-item twin re-issue (empty under
+        whole-batch mode, where tripped members instead fold into ``slow``
+        and the STRAGGLER cap handles the entire batch).  Stragglers hit
+        edge-phase work only, mirroring the sequential engine.  Counters are
+        per request so they match the sequential engine's exactly."""
+        per_item = straggler_mode(self.cfg) == "item"
         if items[0].phase != EDGE or self.cfg.straggler_prob <= 0.0:
-            return 1.0
-        reissue = self.cfg.straggler_reissue
-        slow = 1.0
-        for it in items:
-            s = straggler_slow(self.cfg, it.rid)
+            return 1.0, []
+        kept_slow, reissue_rids, draws = partition_stragglers(
+            self.cfg, [it.rid for it in items]
+        )
+        tripped = set(reissue_rids)
+        for rid, s in draws.items():
             if s > 1.0:
-                self.telemetry.record_straggler(reissued=s > reissue)
-            slow = max(slow, s)
-        return slow
+                self.telemetry.record_straggler(
+                    reissued=rid in tripped, per_item=per_item
+                )
+        if not per_item:
+            slow = max([kept_slow] + [draws[r] for r in reissue_rids])
+            return slow, []
+        return kept_slow, [it for it in items if it.rid in tripped]
 
     def _dispatch(self, pool: str, now: float) -> None:
         st = self.pools[pool]
@@ -316,19 +335,50 @@ class ContinuousRuntime:
             items, bucket = res
             replica = st.free.pop()
             dur = self._batch_duration(pool, items[0].steps, bucket)
-            slow = self._batch_slowdown(items)
+            slow, reissue_items = self._straggler_plan(items)
             bid = next(self._batch_seq)
-            self._inflight[bid] = _Batch(pool, replica, items, now, dur)
-            if slow > self.cfg.straggler_reissue:
-                # lagging batch: the detector trips once it has exceeded
-                # (reissue−1)× its expected time; the re-issued twin copy
-                # then needs one more nominal service time, so completion
-                # lands at reissue × expected — the sequential engine's cap
-                self.evq.push(
-                    now + dur * max(self.cfg.straggler_reissue - 1.0, 0.0),
-                    STRAGGLER, bid,
+            detect = now + dur * max(self.cfg.straggler_reissue - 1.0, 0.0)
+            if reissue_items:
+                # per-item mitigation: pre-stage a sub-batch of only the
+                # straggling samples; when the detector trips, the twin
+                # replica re-runs just those (the Executor's
+                # generate_bucketed(..., subset=...) path), padded to their
+                # own — usually smaller — bucket, so the re-issue cost
+                # follows the same batch_cost_growth model.  The sub-batch
+                # duration scales off the issued ``dur`` so the dispatch
+                # jitter carries over.
+                split = {it.rid for it in reissue_items}
+                kept = [it for it in items if it.rid not in split]
+                steps = items[0].steps
+                sub_bucket = bucketize(
+                    len(reissue_items), tuple(sorted(self.rt.buckets))
                 )
-            done = now + dur * slow
+                sub_dur = dur * (
+                    lat.batch_service_time(
+                        pool, steps, sub_bucket, self.rt.batch_cost_growth)
+                    / lat.batch_service_time(
+                        pool, steps, bucket, self.rt.batch_cost_growth)
+                )
+                sub_bid = next(self._batch_seq)
+                self._inflight[sub_bid] = _Batch(
+                    pool, None, reissue_items, detect, sub_dur
+                )
+                self.evq.push(detect, STRAGGLER_PARTIAL, sub_bid)
+                self._inflight[bid] = _Batch(pool, replica, kept, now, dur)
+                # kept samples finish at their own (un-straggled) pace; a
+                # batch whose every member straggles is abandoned once the
+                # detector hands its samples to the twin
+                done = now + dur * slow if kept else detect
+            else:
+                self._inflight[bid] = _Batch(pool, replica, items, now, dur)
+                if slow > self.cfg.straggler_reissue:
+                    # whole-batch mode lagging batch: the detector trips
+                    # once it has exceeded (reissue−1)× its expected time;
+                    # the re-issued twin copy then needs one more nominal
+                    # service time, so completion lands at reissue ×
+                    # expected — the sequential engine's cap
+                    self.evq.push(detect, STRAGGLER, bid)
+                done = now + dur * slow
             st.busy_until[replica] = done
             self.telemetry.record_batch(pool, len(items), bucket, dur, forced)
             if self.rt.trace:
@@ -342,9 +392,10 @@ class ContinuousRuntime:
     # ------------------------------------------------------------------
 
     def _on_straggler(self, bid: int, now: float) -> None:
-        """Re-issue a still-straggling batch on the twin replica: the copy
-        completes one nominal service time from detection, superseding the
-        original (slow) completion event."""
+        """Whole-batch re-issue: a still-straggling batch re-runs entirely
+        on the twin replica, the copy completing one nominal service time
+        from detection and superseding the original (slow) completion
+        event.  Every member — straggling or not — pays the cap."""
         b = self._inflight.get(bid)
         if b is None or b.gen != 0:
             return
@@ -358,11 +409,35 @@ class ContinuousRuntime:
         # unconditional — the sequential engine's semantics exactly
         # the straggling original is abandoned at the capped completion
         st.busy_until[b.replica] = done
-        self.telemetry.record_reissue(b.pool)
+        self.telemetry.record_reissue(b.pool, n_items=len(b.items))
         if self.rt.trace:
             for it in b.items:
                 self.trace[it.rid]["reissued_at"] = now
         self.evq.push(done, BATCH_DONE, (bid, 1))
+
+    def _on_straggler_partial(self, bid: int, now: float) -> None:
+        """Partial re-issue: the twin replica picks up the pre-staged
+        sub-batch holding only the straggling samples, completing one
+        sub-batch service time after detection.  The kept samples of the
+        original batch finish independently — per-item mitigation never
+        taxes a healthy co-batched request."""
+        b = self._inflight.get(bid)
+        if b is None:
+            return
+        st = self.pools[b.pool]
+        done = now + b.dur
+        if st.free:  # twin replica hosts the re-run
+            b.replica = st.free.pop()
+            st.busy_until[b.replica] = done
+        # with no twin free the re-run borrows capacity — the completion
+        # bound stays unconditional, matching the sequential engine
+        self.telemetry.record_reissue(
+            b.pool, n_items=len(b.items), partial=True
+        )
+        if self.rt.trace:
+            for it in b.items:
+                self.trace[it.rid]["reissued_at"] = now
+        self.evq.push(done, BATCH_DONE, (bid, 0))
 
     def _on_replica_fail(self, pool: str, idx: int, now: float) -> None:
         """Injected outage: the replica accepts no new batches (in-flight

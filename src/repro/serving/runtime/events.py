@@ -24,10 +24,17 @@ DEVICE_READY = "device_ready"
 FLUSH = "flush"
 # fault-tolerance events (sequential-engine parity): a replica dropping out
 # of / rejoining its pool, and the straggler detector tripping on an
-# in-flight batch (payload: batch id) to re-issue it on the twin replica
+# in-flight batch (payload: batch id) to re-issue it on the twin replica.
+# STRAGGLER re-issues the *whole* batch (straggler_mode="batch"); under
+# straggler_mode="item" the detector instead fires STRAGGLER_PARTIAL, whose
+# payload is the id of a pre-staged sub-batch holding only the straggling
+# samples — the twin replica re-runs just those via the Executor's
+# partial-batch re-execution path, while the kept samples complete at their
+# own (un-straggled) pace.
 REPLICA_FAIL = "replica_fail"
 REPLICA_RECOVER = "replica_recover"
 STRAGGLER = "straggler"
+STRAGGLER_PARTIAL = "straggler_partial"
 
 EDGE = "edge"
 DEVICE = "device"

@@ -30,6 +30,23 @@ class FaultCounters:
     replica_recoveries: int = 0  # outages that healed within the run
     stragglers_injected: int = 0  # edge-phase requests slowed > 1×
     stragglers_reissued: int = 0  # requests past the re-issue threshold
+    # mitigation split (per request, like the counters above — the mechanism
+    # that re-ran each straggling request, set by SimConfig.straggler_mode):
+    reissued_per_item: int = 0  # re-run as a partial sub-batch on the twin
+    reissued_whole_batch: int = 0  # re-run by re-issuing its whole batch
+
+    def note_straggler(self, tripped: bool, per_item: bool) -> None:
+        """Account one straggling request (draw > 1×); ``tripped`` when its
+        slowdown exceeds the re-issue threshold, ``per_item`` for the
+        partial-batch mitigation mode.  Both engines route through this so
+        the split stays parity-comparable."""
+        self.stragglers_injected += 1
+        if tripped:
+            self.stragglers_reissued += 1
+            if per_item:
+                self.reissued_per_item += 1
+            else:
+                self.reissued_whole_batch += 1
 
     def as_dict(self) -> Dict[str, int]:
         return {
@@ -37,6 +54,8 @@ class FaultCounters:
             "replica_recoveries": self.replica_recoveries,
             "stragglers_injected": self.stragglers_injected,
             "stragglers_reissued": self.stragglers_reissued,
+            "reissued_per_item": self.reissued_per_item,
+            "reissued_whole_batch": self.reissued_whole_batch,
         }
 
 
@@ -50,7 +69,9 @@ class PoolStats:
     busy_s: float = 0.0  # replica-seconds spent serving batches
     forced_flushes: int = 0  # sub-maximal batches dispatched at linger deadline
     failures: int = 0  # replica outages injected on this pool
-    reissued_batches: int = 0  # batches re-issued on the twin replica
+    reissued_batches: int = 0  # whole batches re-issued on the twin replica
+    reissued_partial_batches: int = 0  # straggler-only sub-batches re-issued
+    reissued_items: int = 0  # samples re-run on a twin (whole or partial)
 
     @property
     def occupancy(self) -> float:
@@ -93,13 +114,17 @@ class RuntimeTelemetry:
         if recovers:
             self.faults.replica_recoveries += 1
 
-    def record_straggler(self, reissued: bool) -> None:
-        self.faults.stragglers_injected += 1
-        if reissued:
-            self.faults.stragglers_reissued += 1
+    def record_straggler(self, reissued: bool, per_item: bool = False) -> None:
+        self.faults.note_straggler(tripped=reissued, per_item=per_item)
 
-    def record_reissue(self, pool: str) -> None:
-        self._pool(pool).reissued_batches += 1
+    def record_reissue(self, pool: str, n_items: int = 0,
+                       partial: bool = False) -> None:
+        p = self._pool(pool)
+        if partial:
+            p.reissued_partial_batches += 1
+        else:
+            p.reissued_batches += 1
+        p.reissued_items += n_items
 
     def summary(self) -> Dict[str, dict]:
         out = {}
@@ -116,5 +141,7 @@ class RuntimeTelemetry:
                 "busy_s": p.busy_s,
                 "failures": p.failures,
                 "reissued_batches": p.reissued_batches,
+                "reissued_partial_batches": p.reissued_partial_batches,
+                "reissued_items": p.reissued_items,
             }
         return out

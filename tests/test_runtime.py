@@ -268,9 +268,9 @@ def test_compressed_handoff_batch_independent():
     np.testing.assert_allclose(rec_a[0], rec_b[0], rtol=0, atol=0)
 
 
-def test_generate_bucketed_invariant_to_bucket():
-    """Per-sample PRNG keys: a request's generation is identical whichever
-    pad-to-bucket micro-batch shape it lands in."""
+def _toy_executor():
+    """Executor over toy denoisers: exercises the real jit/bucketing/seeding
+    machinery without trained families."""
     from types import SimpleNamespace
 
     from repro.diffusion.families import SPECS
@@ -286,13 +286,41 @@ def test_generate_bucketed_invariant_to_bucket():
         )
         for name in ("XL", "F3")
     }
-    ex = Executor(fams)
+    return Executor(fams)
+
+
+def test_generate_bucketed_invariant_to_bucket():
+    """Per-sample PRNG keys: a request's generation is identical whichever
+    pad-to-bucket micro-batch shape it lands in."""
+    ex = _toy_executor()
     for arm in (ARMS[0], ARMS[2]):  # standalone + an XL relay arm
         seeds = np.arange(5) + 100
         out5 = ex.generate_bucketed(arm, seeds)  # bucket 8
         out1 = ex.generate_bucketed(arm, seeds[:1])  # bucket 1
         assert out5.shape[0] == 5 and out1.shape[0] == 1
         np.testing.assert_allclose(out1[0], out5[0], rtol=1e-5, atol=1e-6)
+
+
+def test_generate_bucketed_subset_bit_identical():
+    """Partial-batch re-execution (the straggler re-issue path): re-running
+    any index subset of a micro-batch — padded to its own, smaller bucket —
+    reproduces the corresponding rows of the full call bit-for-bit, so a
+    twin replica can re-run just the stragglers without perturbing their
+    outputs."""
+    ex = _toy_executor()
+    seeds = np.arange(7) + 400
+    for arm in (ARMS[0], ARMS[2], ARMS[8]):  # standalone, XL relay, F3 relay
+        full = ex.generate_bucketed(arm, seeds)  # pads to the 8-bucket
+        for subset in ([2], [1, 4, 6], [6, 0, 3], list(range(7))):
+            part = ex.generate_bucketed(arm, seeds, subset=subset)
+            assert part.shape[0] == len(subset)
+            np.testing.assert_array_equal(part, full[np.asarray(subset)])
+
+
+def test_generate_bucketed_empty_subset_rejected():
+    ex = _toy_executor()
+    with pytest.raises(ValueError, match="empty subset"):
+        ex.generate_bucketed(ARMS[0], np.arange(4), subset=[])
 
 
 # ---------------------------------------------------------------------------

@@ -40,11 +40,12 @@ def _run(cfg, reqs, qt, runtime, compress):
     return eng, {r.rid: r for r in recs}
 
 
+@pytest.mark.parametrize("mode", ["item", "batch"])
 @pytest.mark.parametrize("compress", [True, False], ids=["int8", "raw"])
 @pytest.mark.parametrize("regime", sorted(REGIMES))
-def test_runtime_parity(regime, compress):
+def test_runtime_parity(regime, compress, mode):
     cfg = SimConfig(n_requests=120, mean_interarrival=1.5, seed=11,
-                    **REGIMES[regime])
+                    straggler_mode=mode, **REGIMES[regime])
     reqs = make_requests(cfg)
     qt = synthetic_quality_table(reqs)
 
@@ -77,6 +78,13 @@ def test_runtime_parity(regime, compress):
         assert fc.stragglers_injected > 0
         # factor 6–8 ≫ reissue threshold 2.5: every straggler re-issues
         assert fc.stragglers_reissued == fc.stragglers_injected
+        # the mitigation split follows straggler_mode, in both runtimes
+        if mode == "item":
+            assert fc.reissued_per_item == fc.stragglers_reissued
+            assert fc.reissued_whole_batch == 0
+        else:
+            assert fc.reissued_whole_batch == fc.stragglers_reissued
+            assert fc.reissued_per_item == 0
     else:
         assert fc.stragglers_injected == fc.stragglers_reissued == 0
     if "fail_replica" in REGIMES[regime]:
@@ -93,13 +101,14 @@ def test_continuous_is_default_runtime():
     assert fallback.runtime == "sequential"
 
 
-def test_straggler_reissue_caps_latency_continuous():
+@pytest.mark.parametrize("mode", ["item", "batch"])
+def test_straggler_reissue_caps_latency_continuous(mode):
     """The discrete-event re-issue path bounds a straggling batch at
     reissue × expected: runs with factor ≫ threshold must not be slower
     than the threshold itself would allow."""
     def p95(**fault_kw):
         cfg = SimConfig(n_requests=150, mean_interarrival=2.0, seed=7,
-                        **fault_kw)
+                        straggler_mode=mode, **fault_kw)
         reqs = make_requests(cfg)
         qt = synthetic_quality_table(reqs)
         eng = ServingEngine(CyclePolicy(), qt, cfg)
@@ -109,9 +118,68 @@ def test_straggler_reissue_caps_latency_continuous():
     base = p95()
     capped = p95(straggler_prob=0.3, straggler_factor=50.0)
     mild = p95(straggler_prob=0.3, straggler_factor=2.5)
-    # factor 50 with re-issue behaves like factor 2.5 (the cap), far from 50×
+    # factor 50 with re-issue is far from 50× the straggler-free baseline
     assert capped < base * 6
-    assert capped == pytest.approx(mild, rel=0.35)
+    if mode == "batch":
+        # whole-batch re-issue behaves like factor 2.5 (the cap)
+        assert capped == pytest.approx(mild, rel=0.35)
+    else:
+        # per-item re-issue: only the stragglers pay the cap — healthy
+        # co-batched requests no longer drag, so re-issued factor-50 runs
+        # end up no slower than un-reissued factor-2.5 ones (whose whole
+        # batches move at 2.5× whenever they hold a straggler)
+        assert capped <= mild
+
+
+def test_partial_reissue_beats_whole_batch_tail():
+    """Same workload, same decisions, same quality, same injected/re-issued
+    straggler counts — per-item mitigation must strictly improve tail
+    latency over whole-batch re-issue (the ROADMAP's per-item re-issue
+    cost model, now the default)."""
+    runs = {}
+    for mode in ("item", "batch"):
+        cfg = SimConfig(n_requests=200, mean_interarrival=1.0, seed=13,
+                        straggler_prob=0.3, straggler_factor=10.0,
+                        straggler_mode=mode)
+        reqs = make_requests(cfg)
+        qt = synthetic_quality_table(reqs)
+        eng = ServingEngine(CyclePolicy(), qt, cfg)
+        runs[mode] = (eng, {r.rid: r for r in eng.run(reqs)})
+    (eng_i, rec_i), (eng_b, rec_b) = runs["item"], runs["batch"]
+    rids = sorted(rec_i)
+    assert rids == sorted(rec_b)
+    assert [rec_i[i].arm for i in rids] == [rec_b[i].arm for i in rids]
+    assert all(rec_i[i].quality == rec_b[i].quality for i in rids)
+
+    fi, fb = eng_i.fault_counters, eng_b.fault_counters
+    assert fi.stragglers_injected == fb.stragglers_injected > 0
+    assert fi.stragglers_reissued == fb.stragglers_reissued > 0
+    assert fi.reissued_per_item == fi.stragglers_reissued
+    assert fb.reissued_whole_batch == fb.stragglers_reissued
+
+    p95_i = np.percentile([rec_i[i].t_total for i in rids], 95)
+    p95_b = np.percentile([rec_b[i].t_total for i in rids], 95)
+    assert p95_i < p95_b, (p95_i, p95_b)
+
+    # the twin re-runs only the stragglers (one edge batch per request),
+    # while whole-batch re-issue drags healthy co-batched samples along
+    items_i = sum(p.reissued_items for p in eng_i.telemetry.pools.values())
+    items_b = sum(p.reissued_items for p in eng_b.telemetry.pools.values())
+    assert items_i == fi.stragglers_reissued
+    assert items_b >= items_i
+    partial = sum(p.reissued_partial_batches
+                  for p in eng_i.telemetry.pools.values())
+    whole = sum(p.reissued_batches for p in eng_i.telemetry.pools.values())
+    assert partial > 0 and whole == 0
+
+
+def test_unknown_straggler_mode_rejected():
+    cfg = SimConfig(n_requests=5, straggler_mode="speculative")
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    for runtime in ("sequential", "continuous"):
+        with pytest.raises(ValueError, match="straggler_mode"):
+            ServingEngine(CyclePolicy(), qt, cfg, runtime=runtime).run(reqs)
 
 
 def test_replica_failure_shifts_load_to_twin():

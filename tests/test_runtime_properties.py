@@ -77,6 +77,31 @@ def test_generate_bucketed_composition_invariant(toy_executor, seeds,
     np.testing.assert_allclose(out_mixed[-1], out[0], rtol=1e-5, atol=1e-6)
 
 
+@settings(max_examples=15, deadline=None)
+@given(
+    seeds=st.lists(st.integers(0, 500), min_size=2, max_size=8, unique=True),
+    arm_idx=st.sampled_from([0, 2, 8]),
+    data=st.data(),
+)
+def test_generate_bucketed_subset_matches_full(toy_executor, seeds, arm_idx,
+                                               data):
+    """Partial-batch re-execution property: for ANY index subset of ANY
+    micro-batch (any order, any size, hence any re-issue bucket), the
+    subset re-run is bit-identical to the corresponding rows of the full
+    ``generate_bucketed`` call — the contract that makes per-item straggler
+    re-issue on a twin replica output-transparent."""
+    arm = ARMS[arm_idx]
+    batch = np.array(seeds)
+    full = toy_executor.generate_bucketed(arm, batch)
+    subset = data.draw(
+        st.lists(st.integers(0, len(seeds) - 1), min_size=1,
+                 max_size=len(seeds), unique=True),
+        label="subset",
+    )
+    part = toy_executor.generate_bucketed(arm, batch, subset=subset)
+    np.testing.assert_array_equal(part, full[np.asarray(subset)])
+
+
 # ---------------------------------------------------------------------------
 # shared occupancy features: identical across runtimes
 # ---------------------------------------------------------------------------
