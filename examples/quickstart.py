@@ -29,6 +29,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--fast", action="store_true", help="train tiny 120-step families")
 ap.add_argument("--family", default="F3", choices=["F3", "XL"])
 ap.add_argument("--s", type=int, default=15)
+ap.add_argument("--compress", action="store_true",
+                help="int8-quantize the handoff latent (repro.quantization "
+                     "row-wise wire format, the serving runtime's default)")
 args = ap.parse_args()
 
 steps = 120 if args.fast else 1500
@@ -56,7 +59,8 @@ runs["full-large"] = (x_full, time.time() - t0, lat.full_model_latency(
 
 t0 = time.time()
 x_relay, info = relay_generate(fam.spec, plan, fam.large_fn, fam.large_params,
-                               fam.small_fn, fam.small_params, xT, cond, cond)
+                               fam.small_fn, fam.small_params, xT, cond, cond,
+                               compress_handoff=args.compress)
 edge_pool, dev_pool = ("sd3l", "sd3m") if args.family == "F3" else ("sdxl", "vega")
 t_cal = (plan.s * lat.STEP_COST[edge_pool]
          + (fam.spec.t_device - plan.s_prime) * lat.STEP_COST[dev_pool])
@@ -76,3 +80,6 @@ for name, (x, wall, cal) in runs.items():
     print(f"{name:18s} {q['clip']:7.4f} {q['ir']:7.4f} {q['ocr']:6.3f} "
           f"{wall:8.2f} {cal:10.2f} {base/cal:7.2f}x")
 print(f"\nrelay transferred {info['transfer_bytes']} bytes at the handoff")
+if args.compress:
+    print(f"int8 handoff deviation (Eq. 1 accounting): "
+          f"{float(info['handoff_deviation_pct']):.3f}%")

@@ -35,13 +35,26 @@ python -m pytest -q -m "not slow" --junitxml "$JUNIT_DIR/fast.xml" \
     --ignore tests/test_runtime_parity.py
 
 if [ "${1:-full}" = "full" ]; then
+    echo "== distributed correctness (sharded/pipeline/psum vs local refs) =="
+    # explicit hard gate (not just via the tier-1 sweep): the distribution
+    # suite plus the mesh×dtype×quantizer parity harness.  --durations and
+    # the parameterized-by-mesh-shape test ids put per-mesh-shape timing
+    # into distribution.xml, so future drift is bisectable from the
+    # artifact alone.
+    python -m pytest -q --durations=0 \
+        --junitxml "$JUNIT_DIR/distribution.xml" \
+        tests/test_distribution.py tests/test_distribution_parity.py
+
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
     out="$(mktemp)"
     set +e
     # -rfE: force a short-summary line per failure/error — the triage below
     # parses those lines, and some pytest/verbosity combinations would
     # otherwise collapse the ERRORS report entirely under --tb=no
+    # distribution suites already ran above as their own hard gate
     python -m pytest -q -rfE --tb=no --junitxml "$JUNIT_DIR/full.xml" \
+        --ignore tests/test_distribution.py \
+        --ignore tests/test_distribution_parity.py \
         | tee "$out"
     rc=${PIPESTATUS[0]}
     set -e

@@ -103,12 +103,10 @@ def relay_generate(
     # sigma matching; shared latent space).  Optionally int8-quantized for
     # the wire, in which case the device sees the round-tripped latent.
     if compress_handoff:
-        from repro.distributed.compression import latent_roundtrip_int8
+        from repro.quantization import latent_roundtrip, relative_deviation
 
-        rec, transfer_bytes = latent_roundtrip_int8(x_mid)
-        handoff_dev = (
-            jnp.linalg.norm(rec - x_mid) / (jnp.linalg.norm(x_mid) + 1e-12)
-        ) * 100.0
+        rec, transfer_bytes = latent_roundtrip(x_mid, "rowwise")
+        handoff_dev = relative_deviation(x_mid, rec) * 100.0
         x_relay = rec
     else:
         x_relay = x_mid

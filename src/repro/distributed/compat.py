@@ -1,0 +1,34 @@
+"""JAX API compatibility for the distributed layer.
+
+The distributed modules target the modern ``jax.shard_map`` / ``jax.lax.pvary``
+API; the pinned container toolchain still ships them under
+``jax.experimental.shard_map`` (and has no ``pvary`` at all — replication
+tracking is the older ``check_rep`` machinery).  Import ``shard_map`` and
+``pvary`` from here so every call site works on both.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        # check_rep=False: the legacy replication checker predates several
+        # primitives these kernels use (sort-based dispatch, ppermute
+        # schedules) and would reject otherwise-correct programs.
+        return _shard_map_legacy(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+
+    def pvary(x, axes):  # noqa: ARG001 - legacy jax has no varying types
+        """No-op: pre-varying-types shard_map treats all values as varying."""
+        return x

@@ -1,105 +1,71 @@
-"""Low-precision compression utilities: row-wise int8 quantization used for
-(a) quantized optimizer states (halves/quarters the m/v HBM footprint of the
-671B MoE) and (b) compressed cross-pod gradient/delta synchronization with
-error feedback (DiLoCo-style periodic sync in launch/train.py)."""
+"""Compressed cross-pod collectives (DiLoCo-style periodic sync with error
+feedback in launch/train.py).
+
+The quantizers themselves live in :mod:`repro.quantization` — one module owns
+every int8 round-trip (relay handoff transport, optimizer state, and these
+collectives) so the relay's Eq.1-style deviation model and the collective's
+error feedback share one code path.  This module keeps the collective
+(`compressed_psum`) and re-exports the historical quantizer names with a
+DeprecationWarning for external callers.
+"""
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+from repro.quantization import error_feedback_step, get_quantizer
+
 Array = jax.Array
 
-
-def quant_rowwise(x: Array) -> dict:
-    """Symmetric int8 quantization with one fp32 scale per last-dim row."""
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return {"q": q, "s": scale}
-
-
-def dequant_rowwise(qs: dict) -> Array:
-    return qs["q"].astype(jnp.float32) * qs["s"]
+# historical API, now in repro.quantization — resolved lazily via
+# __getattr__ below so importing them still works but warns
+_MOVED = (
+    "quant_rowwise", "dequant_rowwise", "quant_error",
+    "quant_log8", "dequant_log8", "LOG8_RANGE",
+    "latent_roundtrip_int8", "latent_roundtrip",
+)
 
 
-def quant_error(x: Array) -> Array:
-    """Residual left behind by quantization (for error feedback)."""
-    return x.astype(jnp.float32) - dequant_rowwise(quant_rowwise(x))
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.distributed.compression.{name} moved to "
+            f"repro.quantization.{name}; this re-export will be removed",
+            DeprecationWarning, stacklevel=2,
+        )
+        import repro.quantization as q
+
+        return getattr(q, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def latent_roundtrip_int8(x: Array):
-    """Channel-rows int8 round-trip of a (..., H, W, C) latent — the relay
-    handoff's wire format: each quantization row is one sample's spatial
-    slice of one channel, one fp32 scale each (C scales per latent,
-    matching ``repro.serving.latency.latent_wire_bytes``).  Rows never
-    cross leading (batch) dims, so a sample's reconstruction is independent
-    of its batch companions.
-
-    Returns (reconstructed latent in x's dtype, payload bytes on the wire).
-    jit-safe: the payload is a static Python int."""
-    xm = jnp.moveaxis(x, -1, -3)  # (..., C, H, W)
-    rows = xm.reshape(xm.shape[:-2] + (-1,))  # (..., C, H·W)
-    qs = quant_rowwise(rows)
-    rec = jnp.moveaxis(
-        dequant_rowwise(qs).reshape(xm.shape), -3, -1
-    ).astype(x.dtype)
-    payload = qs["q"].size * qs["q"].dtype.itemsize + qs["s"].size * 4
-    return rec, payload
-
-
-# ---------------------------------------------------------------------------
-# log-domain (dynamic-exponent) int8 — for Adam moments, whose within-row
-# dynamic range spans orders of magnitude (linear int8 zeroes small v and
-# destabilizes m/√v; cf. 8-bit Adam's dynamic tree quantization).
-# ---------------------------------------------------------------------------
-
-LOG8_RANGE = 24.0  # exponent range: 2^-24 … 1 relative to the row max
-
-
-def quant_log8(x: Array) -> dict:
-    """Signed log-scale int8: |q| ∈ 1..127 encodes log2(|x|/rowmax)."""
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax, 1.0)
-    r = jnp.abs(xf) / scale
-    e = jnp.log2(jnp.maximum(r, 2.0 ** (-LOG8_RANGE - 1)))
-    mag = jnp.round(127.0 * (1.0 + e / LOG8_RANGE))
-    mag = jnp.where(r < 2.0 ** (-LOG8_RANGE), 0.0, jnp.clip(mag, 1, 127))
-    q = (jnp.sign(xf) * mag).astype(jnp.int8)
-    return {"q": q, "s": scale}
-
-
-def dequant_log8(qs: dict) -> Array:
-    q = qs["q"].astype(jnp.float32)
-    mag = jnp.abs(q)
-    val = jnp.exp2(LOG8_RANGE * (mag / 127.0 - 1.0)) * qs["s"]
-    return jnp.where(mag == 0, 0.0, jnp.sign(q) * val)
-
-
-def compressed_psum(tree, mesh, axis: str = "pod", error_state=None):
+def compressed_psum(tree, mesh, axis: str = "pod", error_state=None,
+                    quantizer="rowwise"):
     """Mean-reduce a pytree across ``axis`` in int8 with error feedback.
 
-    Each shard quantizes (value + carried error), the int8 payloads are
-    psum'd (widened to int32 on the wire — 4× fewer bytes than fp32 either
-    way since scales are per-row), and the residual is carried to the next
-    sync.  Returns (reduced_tree, new_error_state).
+    Each shard quantizes (value + carried error) with ``quantizer`` (any
+    name registered in ``repro.quantization.QUANTIZERS``), the dequantized
+    payloads are psum'd, and the residual is carried to the next sync — so
+    the accumulated mean converges to exact even though each individual
+    sync is lossy.  Returns (reduced_tree, new_error_state).
     """
+    qz = get_quantizer(quantizer)
     n = mesh.shape[axis]
     if error_state is None:
         error_state = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), tree)
 
     def one(x, err):
         def body(x_l, e_l):
-            v = x_l.astype(jnp.float32) + e_l
-            qs = quant_rowwise(v)
-            new_err = v - dequant_rowwise(qs)
-            tot = jax.lax.psum(qs["q"].astype(jnp.int32) * qs["s"], axis)
+            qs, new_err = error_feedback_step(x_l, e_l, qz)
+            tot = jax.lax.psum(qz.dequant(qs), axis)
             return tot / n, new_err
 
         spec = P(*([None] * x.ndim))
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec),
         )(x, err)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import pvary, shard_map
+
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
@@ -54,8 +56,8 @@ def pipeline_apply(
         mb = xs.shape[1]
         d = xs.shape[2]
         # carries start as stage-varying so the scan carry types stay stable
-        buf = jax.lax.pvary(jnp.zeros((mb, d), xs.dtype), (axis,))
-        out = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
+        buf = pvary(jnp.zeros((mb, d), xs.dtype), (axis,))
+        out = pvary(jnp.zeros_like(xs), (axis,))
 
         def step(carry, t):
             buf, out = carry
@@ -81,7 +83,7 @@ def pipeline_apply(
         return jax.lax.psum(out, axis)
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         stage_fn, mesh=mesh,
         in_specs=(spec_p, P()), out_specs=P(),
     )(stage_params, x)

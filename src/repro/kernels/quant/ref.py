@@ -1,16 +1,18 @@
-"""Oracle for row-wise int8 quantization (mirrors distributed/compression.py)."""
+"""Oracle for row-wise int8 quantization — delegates to the unified
+quantizer module (`repro.quantization`), keeping the kernel's (q, scale)
+tuple signature so the Pallas kernel and every other int8 path in the repo
+share one reference implementation."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.quantization import dequant_rowwise, quant_rowwise
+
 
 def quant_int8_ref(x: jnp.ndarray):
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    qs = quant_rowwise(x)
+    return qs["q"], qs["s"]
 
 
 def dequant_int8_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+    return dequant_rowwise({"q": q, "s": scale})

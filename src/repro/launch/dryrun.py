@@ -95,7 +95,10 @@ def build_cell(args):
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     print(mem)    # proves it fits
-    print({k: v for k, v in cost.items() if "flops" in k or k == "bytes accessed"})
+    # cost_analysis() is a dict, a list-of-dicts, or None depending on the
+    # jax version — cost_summary normalizes (same path analyze() takes)
+    cs = roofline.cost_summary(cost)
+    print({"flops": cs.flops, "bytes accessed": cs.bytes_accessed})
 
     mf = roofline.model_flops_estimate(cfg, shape)
     ana = roofline.analyze(compiled.as_text(), cost, n_chips, model_flops=mf)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.models import common as cm
 from repro.configs.base import ArchConfig, MoEConfig
 
@@ -200,7 +201,7 @@ def moe_fwd(
                                 "w_down": jnp.zeros((tp, d))})
     shared_specs = {"w_gate": P(None, axis), "w_up": P(None, axis),
                     "w_down": P(axis, None)}
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(

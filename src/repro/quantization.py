@@ -1,0 +1,200 @@
+"""Unified low-precision quantization with shared error/deviation accounting.
+
+One module owns every int8 round-trip in the repo:
+
+* **relay handoff wire format** (`latent_roundtrip`) — the edge→device latent
+  serialization used by `repro.core.relay.relay_generate(compress_handoff=)`
+  and the serving runtime's `HandoffTransport`;
+* **compressed collectives** (`error_feedback_step`, consumed by
+  `repro.distributed.compression.compressed_psum`) — DiLoCo-style periodic
+  sync with error feedback;
+* **quantized optimizer state** (`quant_log8` / `dequant_log8`, consumed by
+  `repro.training.optimizer`).
+
+The point of unifying them is the *accounting*: the relay's Eq.1-style
+deviation model (`relative_deviation` — how far the round-tripped latent
+drifts from the true one) and the collective's error feedback
+(`error_feedback_step` — the residual carried into the next sync) are two
+views of the same quantization error, so they must come from the same code.
+A quantizer is a (quant, dequant) pair registered in `QUANTIZERS`; both the
+transport and `compressed_psum` accept any registered quantizer, and the
+parity suites (`tests/test_quantization.py`,
+`tests/test_distribution_parity.py`) sweep them against local references.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# linear row-wise int8
+# ---------------------------------------------------------------------------
+
+
+def quant_rowwise(x: Array) -> dict:
+    """Symmetric int8 quantization with one fp32 scale per last-dim row."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def dequant_rowwise(qs: dict) -> Array:
+    return qs["q"].astype(jnp.float32) * qs["s"]
+
+
+# ---------------------------------------------------------------------------
+# log-domain (dynamic-exponent) int8 — for Adam moments, whose within-row
+# dynamic range spans orders of magnitude (linear int8 zeroes small v and
+# destabilizes m/√v; cf. 8-bit Adam's dynamic tree quantization).
+# ---------------------------------------------------------------------------
+
+LOG8_RANGE = 24.0  # exponent range: 2^-24 … 1 relative to the row max
+
+
+def quant_log8(x: Array) -> dict:
+    """Signed log-scale int8: |q| ∈ 1..127 encodes log2(|x|/rowmax)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 1.0)
+    r = jnp.abs(xf) / scale
+    e = jnp.log2(jnp.maximum(r, 2.0 ** (-LOG8_RANGE - 1)))
+    mag = jnp.round(127.0 * (1.0 + e / LOG8_RANGE))
+    mag = jnp.where(r < 2.0 ** (-LOG8_RANGE), 0.0, jnp.clip(mag, 1, 127))
+    q = (jnp.sign(xf) * mag).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def dequant_log8(qs: dict) -> Array:
+    q = qs["q"].astype(jnp.float32)
+    mag = jnp.abs(q)
+    val = jnp.exp2(LOG8_RANGE * (mag / 127.0 - 1.0)) * qs["s"]
+    return jnp.where(mag == 0, 0.0, jnp.sign(q) * val)
+
+
+# ---------------------------------------------------------------------------
+# quantizer registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Quantizer:
+    """A named (quant, dequant) pair with shared error accounting.
+
+    ``rel_bound`` is the per-row worst-case reconstruction bound the unit
+    tests enforce: linear int8 errs by at most half a quantization step of
+    the row max; log8 errs by at most half a *log* step multiplicatively.
+    """
+
+    name: str
+    quant: Callable[[Array], dict]
+    dequant: Callable[[dict], Array]
+    rel_bound: float  # |x - roundtrip(x)| ≤ rel_bound · rowmax(|x|)
+
+    def roundtrip(self, x: Array) -> Array:
+        return self.dequant(self.quant(x))
+
+    def error(self, x: Array) -> Array:
+        """Residual left behind by quantization (for error feedback)."""
+        return x.astype(jnp.float32) - self.roundtrip(x)
+
+
+QUANTIZERS: Dict[str, Quantizer] = {
+    "rowwise": Quantizer("rowwise", quant_rowwise, dequant_rowwise,
+                         rel_bound=0.5 / 127.0),
+    # half a log2 step of 24/127 ≈ 0.0945 → 2^0.0945 − 1 ≈ 6.8 % of |x|,
+    # but bounded against rowmax like the linear case for a uniform API
+    "log8": Quantizer("log8", quant_log8, dequant_log8,
+                      rel_bound=2.0 ** (0.5 * LOG8_RANGE / 127.0) - 1.0),
+}
+
+
+def get_quantizer(name) -> Quantizer:
+    if isinstance(name, Quantizer):
+        return name
+    try:
+        return QUANTIZERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantizer {name!r}; registered: {sorted(QUANTIZERS)}"
+        ) from None
+
+
+def quant_error(x: Array, quantizer="rowwise") -> Array:
+    """Residual left behind by quantization (for error feedback)."""
+    return get_quantizer(quantizer).error(x)
+
+
+# ---------------------------------------------------------------------------
+# shared accounting: error feedback (collectives) and deviation (relay Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def error_feedback_step(x: Array, err: Array, quantizer="rowwise"):
+    """One error-feedback quantization step: quantize (value + carried
+    residual), return the payload and the new residual.
+
+    This is the primitive both `compressed_psum` (per-shard, per-sync) and
+    any future quantized-transport retry path share: feeding the residual
+    forward makes the *accumulated* reduction exact even though each
+    individual sync is lossy (Deep-Gradient-Compression / 1-bit-Adam-style
+    error accumulation).  Returns ``(qs, new_err)``.
+    """
+    qz = get_quantizer(quantizer)
+    v = x.astype(jnp.float32) + err
+    qs = qz.quant(v)
+    return qs, v - qz.dequant(qs)
+
+
+def relative_deviation(x: Array, rec: Array) -> Array:
+    """‖rec − x‖₂ / ‖x‖₂ — the Eq.1-style deviation of a reconstructed
+    tensor from its reference (a traced scalar under jit).  The relay
+    reports this ×100 as ``handoff_deviation_pct``; the transport caches it
+    per family as the compression quality delta."""
+    xf = x.astype(jnp.float32)
+    return jnp.linalg.norm(rec.astype(jnp.float32) - xf) / (
+        jnp.linalg.norm(xf) + 1e-12
+    )
+
+
+def payload_bytes(qs: dict) -> int:
+    """Actual bytes-on-wire of a quantized payload (int8 + fp32 scales).
+    jit-safe: a static Python int."""
+    return qs["q"].size * qs["q"].dtype.itemsize + qs["s"].size * 4
+
+
+# ---------------------------------------------------------------------------
+# relay handoff wire format
+# ---------------------------------------------------------------------------
+
+
+def latent_roundtrip(x: Array, quantizer="rowwise"):
+    """Channel-rows int8 round-trip of a (..., H, W, C) latent — the relay
+    handoff's wire format: each quantization row is one sample's spatial
+    slice of one channel, one fp32 scale each (C scales per latent,
+    matching ``repro.serving.latency.latent_wire_bytes``).  Rows never
+    cross leading (batch) dims, so a sample's reconstruction is independent
+    of its batch companions.
+
+    Returns (reconstructed latent in x's dtype, payload bytes on the wire).
+    jit-safe: the payload is a static Python int."""
+    qz = get_quantizer(quantizer)
+    xm = jnp.moveaxis(x, -1, -3)  # (..., C, H, W)
+    rows = xm.reshape(xm.shape[:-2] + (-1,))  # (..., C, H·W)
+    qs = qz.quant(rows)
+    rec = jnp.moveaxis(
+        qz.dequant(qs).reshape(xm.shape), -3, -1
+    ).astype(x.dtype)
+    return rec, payload_bytes(qs)
+
+
+def latent_roundtrip_int8(x: Array):
+    """Row-wise int8 latent round-trip (the historical name; equivalent to
+    ``latent_roundtrip(x, "rowwise")``)."""
+    return latent_roundtrip(x, "rowwise")

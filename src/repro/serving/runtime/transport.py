@@ -2,7 +2,8 @@
 
 The relay handoff moves the intermediate latent from the edge pool to the
 device pool over a constrained link.  This layer serializes it through the
-repo's existing row-wise int8 quantizer (`repro.distributed.compression`),
+unified quantizer module (`repro.quantization` — the same code path the
+compressed collectives and the relay's Eq.1 deviation accounting use),
 applied channel-wise — one fp32 scale per channel row — so the payload
 shrinks ≈2× vs fp16 while the quantization error stays well under the
 per-step deviation tolerance of Eq. 1.
@@ -22,19 +23,20 @@ import numpy as np
 from repro.serving import latency as lat
 
 
-def channelwise_roundtrip(x: np.ndarray):
+def channelwise_roundtrip(x: np.ndarray, quantizer: str = "rowwise"):
     """int8 round-trip of a latent batch via the shared wire format
-    (`repro.distributed.compression.latent_roundtrip_int8`): rows are
-    per-channel spatial slices, matching
-    :func:`repro.serving.latency.latent_wire_bytes`.
+    (`repro.quantization.latent_roundtrip`): rows are per-channel spatial
+    slices, matching :func:`repro.serving.latency.latent_wire_bytes`, and
+    the reported error is the same Eq.1-style `relative_deviation` the
+    relay's handoff accounting uses.
     Returns (reconstructed, relative_error)."""
     import jax.numpy as jnp
 
-    from repro.distributed.compression import latent_roundtrip_int8
+    from repro.quantization import latent_roundtrip, relative_deviation
 
     xj = jnp.asarray(x, jnp.float32)
-    rec, _ = latent_roundtrip_int8(xj)
-    err = float(jnp.linalg.norm(rec - xj) / (jnp.linalg.norm(xj) + 1e-12))
+    rec, _ = latent_roundtrip(xj, quantizer)
+    err = float(relative_deviation(xj, rec))
     return np.asarray(rec), err
 
 
@@ -46,6 +48,10 @@ class TransportConfig:
     # similarity-type quality metrics (clip / ir); int8 row-wise error is
     # ~0.3–0.5 % so the delta is small but visible to the bandit.
     quality_sensitivity: float = 1.0
+    # which registered quantizer serializes the latent (repro.quantization.
+    # QUANTIZERS); "rowwise" is the production wire format — the latency
+    # model's byte accounting assumes its int8+per-channel-scale layout
+    quantizer: str = "rowwise"
 
 
 class HandoffTransport:
@@ -90,7 +96,7 @@ class HandoffTransport:
             rng = np.random.default_rng(zlib.crc32(family.encode()))
             c = lat.LATENT_CHANNELS[family]
             x = rng.normal(size=(4, 16, 16, c)).astype(np.float32)
-            _, err = channelwise_roundtrip(x)
+            _, err = channelwise_roundtrip(x, self.cfg.quantizer)
             self._fidelity[family] = err
         return self._fidelity[family]
 

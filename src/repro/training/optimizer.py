@@ -1,7 +1,7 @@
 """AdamW with configurable state precision (fp32 / bf16 / int8-quantized)
 and a cosine-with-warmup schedule.  Pure-JAX, optax-free (offline container).
 
-Int8 states use row-wise symmetric quantization (distributed/compression.py):
+Int8 states use log-domain quantization (repro/quantization.py):
 for the 671B MoE this takes the optimizer HBM from 8 B/param to ~2 B/param,
 which is what lets train_4k fit a single v5e pod (see EXPERIMENTS.md §Dry-run).
 """
@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.compression import dequant_log8, quant_log8
+from repro.quantization import dequant_log8, quant_log8
 
 
 @dataclass(frozen=True)

@@ -1,8 +1,30 @@
 import os
+import subprocess
 import sys
+import textwrap
+from pathlib import Path
 
 # tests run on the single real CPU device; the dry-run subprocess tests set
 # their own XLA_FLAGS (see test_distribution.py)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_forced_devices(body: str, timeout=560, n_devices=8) -> str:
+    """Run a python snippet in a subprocess with ``n_devices`` forced host
+    devices — shared by the multi-device suites (test_distribution.py,
+    test_distribution_parity.py) so the device count/timeout/env never skew
+    between them.  The main pytest process keeps the single real device."""
+    code = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, f"STDERR:\n{r.stderr[-3000:]}"
+    return r.stdout

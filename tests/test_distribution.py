@@ -4,27 +4,13 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 from pathlib import Path
 
 import pytest
 
+from conftest import ROOT, run_forced_devices as run_py
+
 pytestmark = pytest.mark.slow  # subprocess dry-runs; minutes of wall time
-
-ROOT = Path(__file__).resolve().parent.parent
-
-
-def run_py(body: str, timeout=560) -> str:
-    code = textwrap.dedent(body)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = str(ROOT / "src")
-    r = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=timeout, env=env,
-    )
-    assert r.returncode == 0, f"STDERR:\n{r.stderr[-3000:]}"
-    return r.stdout
 
 
 def test_moe_sharded_matches_local():

@@ -1,0 +1,153 @@
+"""Unit tests for the unified quantizer module (`repro.quantization`) — the
+single code path behind the relay handoff transport, the compressed
+collectives and the int8 optimizer state.
+
+Covers: per-quantizer round-trip error bounds, error-feedback residual
+shrinkage (the property `compressed_psum` relies on), transport/compression
+parity on identical inputs, the wire-byte accounting shared with the
+latency model, and the deprecation re-exports at the old
+`repro.distributed.compression` location.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quantization as qz
+from repro.quantization import (
+    LOG8_RANGE,
+    QUANTIZERS,
+    error_feedback_step,
+    get_quantizer,
+    latent_roundtrip,
+    latent_roundtrip_int8,
+    payload_bytes,
+    quant_error,
+    relative_deviation,
+)
+
+
+def _rows(seed=0, shape=(16, 64), scale=3.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+    # mix in rows spanning orders of magnitude (the log8 regime)
+    return x * jnp.logspace(-4, 1, shape[0])[:, None]
+
+
+@pytest.mark.parametrize("name", sorted(QUANTIZERS))
+def test_roundtrip_bound(name):
+    """|x − roundtrip(x)| per element stays within the quantizer's
+    documented bound against the row max."""
+    q = get_quantizer(name)
+    x = _rows()
+    rec = q.roundtrip(x)
+    rowmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    if name == "rowwise":
+        bound = q.rel_bound * rowmax + 1e-7
+    else:
+        # log8: multiplicative half-log-step bound, plus the sub-2^-24
+        # underflow band that deliberately flushes to zero
+        bound = q.rel_bound * jnp.abs(x) + 2.0 ** (-LOG8_RANGE + 1) * rowmax
+    assert jnp.all(jnp.abs(rec - x) <= bound), name
+
+
+@pytest.mark.parametrize("name", sorted(QUANTIZERS))
+def test_quant_preserves_sign_and_zero(name):
+    q = get_quantizer(name)
+    x = jnp.array([[-2.0, -1e-3, 0.0, 1e-3, 2.0]])
+    rec = q.roundtrip(x)
+    assert jnp.all(jnp.sign(rec) * jnp.sign(x) >= 0)
+    assert float(rec[0, 2]) == 0.0
+    # all-zero rows survive (scale guard against amax == 0)
+    z = jnp.zeros((3, 8))
+    np.testing.assert_array_equal(np.asarray(q.roundtrip(z)), np.zeros((3, 8)))
+
+
+@pytest.mark.parametrize("name", sorted(QUANTIZERS))
+def test_error_feedback_residual_shrinks(name):
+    """Error feedback makes the *accumulated* mean exact even though each
+    individual quantization is lossy: the running mean of dequantized
+    payloads converges to x at O(1/k), and the carried residual stays
+    bounded by one quantization step (never accumulates)."""
+    q = get_quantizer(name)
+    x = _rows(seed=3, shape=(8, 32))
+    err = jnp.zeros_like(x, jnp.float32)
+    acc = jnp.zeros_like(x, jnp.float32)
+    first_dev = None
+    step_bound = float(jnp.max(jnp.abs(q.error(x)))) + 1e-6
+    for k in range(1, 9):
+        qs, err = error_feedback_step(x, err, q)
+        acc = acc + q.dequant(qs)
+        dev = float(jnp.max(jnp.abs(acc / k - x)))
+        if first_dev is None:
+            first_dev = max(dev, 1e-9)
+        # residual stays bounded near the single-step quantization error —
+        # it never accumulates.  (log8's multiplicative error admits a
+        # slightly larger steady state: |err*| ≲ ρ(|x|+|err*|).)
+        assert float(jnp.max(jnp.abs(err))) <= step_bound * 2.0
+    # after 8 syncs the accumulated mean is ≥4× closer than the first
+    assert dev <= first_dev / 4 + 1e-8, (dev, first_dev)
+
+
+def test_quant_error_matches_roundtrip():
+    x = _rows(seed=5)
+    for name, q in QUANTIZERS.items():
+        np.testing.assert_allclose(
+            np.asarray(quant_error(x, name)),
+            np.asarray(x - q.roundtrip(x)), rtol=0, atol=1e-7)
+
+
+def test_transport_compression_parity():
+    """The serving transport's round-trip and the quantizer module's latent
+    round-trip are the same computation, bit for bit, on identical inputs —
+    the consolidation's core guarantee."""
+    from repro.serving.runtime.transport import channelwise_roundtrip
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(4, 16, 16, 8)).astype(np.float32)
+    for name in sorted(QUANTIZERS):
+        rec_t, err_t = channelwise_roundtrip(x, name)
+        rec_q, _ = latent_roundtrip(jnp.asarray(x), name)
+        np.testing.assert_array_equal(rec_t, np.asarray(rec_q))
+        assert err_t == pytest.approx(
+            float(relative_deviation(jnp.asarray(x), rec_q)))
+
+
+def test_latent_wire_bytes_matches_latency_model():
+    """payload accounting agrees with the latency model's analytic
+    `latent_wire_bytes` for both families' latent layouts (@1024²)."""
+    from repro.serving import latency as lat
+
+    for fam, c in lat.LATENT_CHANNELS.items():
+        x = jnp.zeros((1, 128, 128, c))
+        _, payload = latent_roundtrip(x, "rowwise")
+        assert payload == lat.latent_wire_bytes(fam, compressed=True)
+
+
+def test_latent_roundtrip_int8_alias():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 4))
+    rec_a, pb_a = latent_roundtrip_int8(x)
+    rec_b, pb_b = latent_roundtrip(x, "rowwise")
+    np.testing.assert_array_equal(np.asarray(rec_a), np.asarray(rec_b))
+    assert pb_a == pb_b
+    qs = qz.quant_rowwise(x.reshape(-1, 4))
+    assert payload_bytes(qs) == x.size + x.size // 4 * 4
+
+
+def test_unknown_quantizer_rejected():
+    with pytest.raises(ValueError, match="unknown quantizer"):
+        get_quantizer("fp4")
+
+
+def test_deprecated_compression_reexports():
+    """The old `repro.distributed.compression` names still resolve (so
+    external callers don't break) but warn, and are the same objects."""
+    import repro.distributed.compression as comp
+
+    for name in ("quant_rowwise", "dequant_rowwise", "quant_log8",
+                 "dequant_log8", "quant_error", "latent_roundtrip_int8",
+                 "LOG8_RANGE"):
+        with pytest.deprecated_call():
+            obj = getattr(comp, name)
+        assert obj is getattr(qz, name), name
+    with pytest.raises(AttributeError):
+        comp.never_existed

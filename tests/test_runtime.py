@@ -259,7 +259,7 @@ def test_compressed_handoff_transfer_bytes():
 def test_compressed_handoff_batch_independent():
     """Quantization rows never cross the batch dim: a sample's round-trip
     is unchanged by a large-amplitude batch companion."""
-    from repro.distributed.compression import latent_roundtrip_int8
+    from repro.quantization import latent_roundtrip_int8
 
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 4))
     loud = x.at[1].multiply(100.0)
