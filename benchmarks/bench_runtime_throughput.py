@@ -173,7 +173,9 @@ def run(quick: bool = False):
         "per_item": item, "whole_batch": batch,
         "p95_win": batch["p95_latency_s"] / item["p95_latency_s"],
     }
-    save_json("bench_runtime_throughput", out)
+    # quick (CI smoke) runs must not clobber the shipped full-run numbers
+    save_json("bench_runtime_throughput_quick" if quick
+              else "bench_runtime_throughput", out)
     return out
 
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# CI gate: runtime parity + fast smoke first (hard gates), then the full
-# tier-1 suite.
+# CI gate: runtime parity + fast smoke first (hard gates), then — in full
+# mode — the e2e IR-path smoke (quickstart + tiny runtime/cascade bench
+# configs), the distributed-correctness suites and the full tier-1 suite.
 #
-#   scripts/ci.sh          # parity + fast smoke + full tier-1
+#   scripts/ci.sh          # parity + fast smoke + e2e + full tier-1
 #   scripts/ci.sh fast     # parity + fast smoke only (~3 min)
 #
 # The fast smoke deselects @pytest.mark.slow suites (family training,
@@ -35,6 +36,13 @@ python -m pytest -q -m "not slow" --junitxml "$JUNIT_DIR/fast.xml" \
     --ignore tests/test_runtime_parity.py
 
 if [ "${1:-full}" = "full" ]; then
+    echo "== e2e smoke (quickstart + runtime/cascade benches, IR path) =="
+    # the relay-program IR exercised through the real entry points on tiny
+    # configs (120-step families, quick bench sweeps); per-test wall times
+    # land in e2e.xml so IR-path slowdowns are visible from the artifact
+    python -m pytest -q --durations=0 --junitxml "$JUNIT_DIR/e2e.xml" \
+        tests/test_e2e_smoke.py
+
     echo "== distributed correctness (sharded/pipeline/psum vs local refs) =="
     # explicit hard gate (not just via the tier-1 sweep): the distribution
     # suite plus the mesh×dtype×quantizer parity harness.  --durations and
@@ -51,10 +59,11 @@ if [ "${1:-full}" = "full" ]; then
     # -rfE: force a short-summary line per failure/error — the triage below
     # parses those lines, and some pytest/verbosity combinations would
     # otherwise collapse the ERRORS report entirely under --tb=no
-    # distribution suites already ran above as their own hard gate
+    # distribution + e2e suites already ran above as their own hard gates
     python -m pytest -q -rfE --tb=no --junitxml "$JUNIT_DIR/full.xml" \
         --ignore tests/test_distribution.py \
         --ignore tests/test_distribution_parity.py \
+        --ignore tests/test_e2e_smoke.py \
         | tee "$out"
     rc=${PIPESTATUS[0]}
     set -e

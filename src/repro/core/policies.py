@@ -43,11 +43,13 @@ class RisePolicy(Policy):
         forced_exploration: bool = True,  # ablation: w/o Forced Exploration
         fixed_relay_step: Optional[int] = None,  # ablation: Fixed Relay Step
         ctx_dim: int = CTX_DIM,  # 8 base dims (+2 with telemetry_context)
+        arms=None,  # action space (program-template arms); default Table II
     ):
         self.p = params or linucb.LinUCBParams()
         if not forced_exploration:
             self.p = linucb.LinUCBParams(**{**self.p.__dict__, "n_min": 0})
-        self.state = linucb.init_state(N_ARMS, ctx_dim)
+        self.arms = tuple(arms) if arms is not None else ARMS
+        self.state = linucb.init_state(len(self.arms), ctx_dim)
         self.key = jax.random.PRNGKey(seed)
         self.use_context = use_context
         self.fixed_relay_step = fixed_relay_step
@@ -67,7 +69,7 @@ class RisePolicy(Policy):
         if self.fixed_relay_step is None:
             return avail
         keep = np.array(
-            [a.relay_step in (None, self.fixed_relay_step) for a in ARMS]
+            [a.relay_step in (None, self.fixed_relay_step) for a in self.arms]
         )
         out = avail & keep
         return out if out.any() else avail
@@ -97,8 +99,9 @@ class RoundRobinPolicy(Policy):
         self.i = 0
 
     def select(self, ctx, avail):
-        for _ in range(N_ARMS):
-            arm = self.i % N_ARMS
+        n = len(avail)
+        for _ in range(n):
+            arm = self.i % n
             self.i += 1
             if avail[arm]:
                 return arm

@@ -1,30 +1,42 @@
-"""Relay inference (paper §III): the large edge model runs the first s
-denoising steps, the intermediate latent is handed to the small device model
-(start step s' by sigma matching, Eq. 4), which finishes refinement.
-Training-free — the only requirement is a shared latent space within the
-family and noise-level continuity at the handoff.
+"""Relay inference (paper §III), generalized to N-hop cascades.
+
+The paper's mechanism: the large edge model runs the first s denoising
+steps, the intermediate latent is handed to the small device model (start
+step s' by sigma matching, Eq. 4), which finishes refinement.  Training-free
+— the only requirement is a shared latent space within the family and
+noise-level continuity at the handoff.  Nothing in that argument is
+two-hop-specific, so the execution engine here folds over an arbitrary
+:class:`repro.core.program.RelayProgram` — e.g. a 3-hop L→M→S cascade —
+applying Eq. 4 sigma matching and Eq. 1-style deviation accounting *per
+hop*.  :func:`relay_generate` remains the two-segment convenience wrapper.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import samplers
+from repro.core.program import (ROLES, Handoff, RelayProgram, RelaySegment,
+                                phase_name)
 from repro.core.schedules import sigma_match
 
 
 @dataclass(frozen=True)
 class FamilySpec:
-    """One relay family: a (large, small) pair sharing a latent space."""
+    """One relay family: models sharing a latent space, keyed by role.
+
+    The classic pair is (large, small); families may also carry a mid-size
+    ladder (``sigmas_mid``) for L→M→S cascades."""
 
     name: str  # "XL" (UNet/DDIM/Karras) or "F3" (MMDiT/RF/linear)
     kind: str  # "ddim" | "rf"
     sigmas_edge: jnp.ndarray  # noise ladder of M_L (length T_e+1)
     sigmas_device: jnp.ndarray  # noise ladder of M_S (length T_d+1)
     latent_shape: tuple = (8, 8, 4)
+    sigmas_mid: Optional[jnp.ndarray] = None  # ladder of M_mid (cascades)
 
     @property
     def t_edge(self) -> int:
@@ -34,9 +46,30 @@ class FamilySpec:
     def t_device(self) -> int:
         return len(self.sigmas_device) - 1
 
+    @property
+    def t_mid(self) -> int:
+        if self.sigmas_mid is None:
+            raise ValueError(f"family {self.name} has no mid-size ladder")
+        return len(self.sigmas_mid) - 1
+
+    def ladder(self, role: str) -> jnp.ndarray:
+        """Sigma ladder of a model role ("large" | "mid" | "small")."""
+        if role not in ROLES:
+            raise KeyError(f"unknown model role {role!r}; expected one of {ROLES}")
+        if role == "large":
+            return self.sigmas_edge
+        if role == "small":
+            return self.sigmas_device
+        if self.sigmas_mid is None:
+            raise ValueError(f"family {self.name} has no mid-size ladder")
+        return self.sigmas_mid
+
 
 @dataclass(frozen=True)
 class RelayPlan:
+    """Two-hop view of a relay: the first handoff of a two-segment program
+    (kept as the paper-facing Eq. 4 vocabulary)."""
+
     family: str
     s: int  # edge handoff step
     s_prime: int  # device start step (sigma-matched)
@@ -61,8 +94,103 @@ def make_relay_plan(spec: FamilySpec, s: int) -> RelayPlan:
     )
 
 
+def plan_view(program: RelayProgram) -> Optional[RelayPlan]:
+    """The legacy two-hop plan of a program's *first* hop (None for a
+    standalone one-segment program)."""
+    if program.n_segments < 2:
+        return None
+    return RelayPlan(
+        family=program.family,
+        s=program.segments[0].stop,
+        s_prime=program.segments[1].start,
+        sigma_handoff=program.handoffs[0].sigma_out,
+        sigma_resume=program.handoffs[0].sigma_in,
+    )
+
+
 def _sampler(kind: str):
-    return samplers.ddim_sample if kind == "ddim" else samplers.rf_euler_sample
+    return samplers.sampler_for(kind)
+
+
+def execute_program(
+    spec: FamilySpec,
+    program: RelayProgram,
+    models: Mapping[str, Tuple[Callable, object]],
+    x_init: jnp.ndarray,
+    cond,
+    *,
+    uncond=None,
+    capture_traj: bool = False,
+):
+    """Fold the latent through a program's segments, handing off between
+    models with Eq. 4 noise continuity and per-hop Eq. 1-style deviation
+    accounting.
+
+    ``models`` maps each segment's role to ``(fn, params)``; ``cond`` (and
+    ``uncond``) may be a single array shared by every segment or a dict
+    keyed by role.  Compressed hops serialize the latent through the
+    registered int8 quantizer — the downstream model resumes from the
+    *dequantized* latent, exactly what the wire would deliver.
+
+    Returns ``(x_final, info)``.  ``info`` carries per-segment trajectories
+    (``trajs``, when ``capture_traj``), per-hop dicts (``hops``: latent,
+    bytes-on-wire, deviation percentage, sigmas) and the totals the legacy
+    API exposed (``transfer_bytes``, ``handoff_deviation_pct`` — the worst
+    hop)."""
+    sample = _sampler(spec.kind)
+
+    def _for(role, v):
+        return v[role] if isinstance(v, dict) else v
+
+    x = x_init
+    trajs = []
+    hops = []
+    total_bytes = 0
+    worst_dev = jnp.zeros(())
+    for k, seg in enumerate(program.segments):
+        fn, params = models[seg.model]
+        x, traj = sample(
+            fn, params, x, spec.ladder(seg.model), _for(seg.model, cond),
+            start=seg.start, stop=seg.stop,
+            uncond=_for(seg.model, uncond) if uncond is not None else None,
+            guidance=seg.guidance, capture_traj=capture_traj,
+        )
+        trajs.append(traj)
+        if k == program.n_hops:
+            break
+        # ---- handoff: latent transferred to the next segment's pool
+        # (noise continuity via sigma matching; shared latent space).
+        # Optionally int8-quantized for the wire, in which case the next
+        # model sees the round-tripped latent.
+        h = program.handoffs[k]
+        x_out = x
+        if h.compress:
+            from repro.quantization import latent_roundtrip, relative_deviation
+
+            rec, nbytes = latent_roundtrip(x, h.quantizer)
+            dev = relative_deviation(x, rec) * 100.0
+            x = rec
+        else:
+            nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+            dev = jnp.zeros(())
+        total_bytes += nbytes
+        worst_dev = jnp.maximum(worst_dev, dev)
+        hops.append({
+            "x_out": x_out,
+            "transfer_bytes": nbytes,
+            "deviation_pct": dev,
+            "sigma_out": h.sigma_out,
+            "sigma_in": h.sigma_in,
+        })
+    info = {
+        "trajs": trajs,
+        "hops": hops,
+        "segment_steps": [seg.steps for seg in program.segments],
+        "phases": [phase_name(program, k) for k in range(program.n_segments)],
+        "transfer_bytes": total_bytes,
+        "handoff_deviation_pct": worst_dev,
+    }
+    return x, info
 
 
 def relay_generate(
@@ -80,8 +208,11 @@ def relay_generate(
     uncond_large=None,
     uncond_small=None,
     compress_handoff: bool = False,
+    capture_traj: bool = True,
 ):
-    """Run M_L for steps [0, s), hand the latent off, run M_S for [s', T_d).
+    """Run M_L for steps [0, s), hand the latent off, run M_S for [s', T_d)
+    — the paper's two-hop relay, expressed as a two-segment
+    :class:`RelayProgram` and executed by :func:`execute_program`.
 
     With ``compress_handoff`` the edge→device latent is serialized through
     the row-wise int8 quantizer (one scale per channel row), modelling the
@@ -90,41 +221,42 @@ def relay_generate(
     ``info["handoff_deviation_pct"]`` (a traced scalar under jit).
 
     Returns (x_final, info) where info carries the handoff latent, both
-    trajectories and the latent norms used by the Fig. 2 analysis;
+    trajectories (``capture_traj=False`` skips the O(steps) stacks — the
+    serving hot path) and the latent norms used by the Fig. 2 analysis;
     ``info["transfer_bytes"]`` is the actual bytes-on-wire of the handoff
     payload (int8 + scales when compressed, raw latent otherwise).
     """
-    sample = _sampler(spec.kind)
-    x_mid, traj_edge = sample(
-        large_fn, large_params, x_init, spec.sigmas_edge, cond_large,
-        start=0, stop=plan.s, uncond=uncond_large, guidance=guidance,
+    program = RelayProgram(
+        family=spec.name,
+        segments=(
+            RelaySegment("large", None, 0, plan.s, guidance),
+            RelaySegment("small", None, plan.s_prime, spec.t_device, guidance),
+        ),
+        handoffs=(
+            Handoff(plan.sigma_handoff, plan.sigma_resume,
+                    compress=compress_handoff),
+        ),
     )
-    # ---- handoff: latent transferred edge → device (noise continuity via
-    # sigma matching; shared latent space).  Optionally int8-quantized for
-    # the wire, in which case the device sees the round-tripped latent.
-    if compress_handoff:
-        from repro.quantization import latent_roundtrip, relative_deviation
-
-        rec, transfer_bytes = latent_roundtrip(x_mid, "rowwise")
-        handoff_dev = relative_deviation(x_mid, rec) * 100.0
-        x_relay = rec
-    else:
-        x_relay = x_mid
-        transfer_bytes = int(np.prod(x_mid.shape)) * x_mid.dtype.itemsize
-        handoff_dev = jnp.zeros(())
-    x_final, traj_dev = sample(
-        small_fn, small_params, x_relay, spec.sigmas_device, cond_small,
-        start=plan.s_prime, stop=spec.t_device, uncond=uncond_small,
-        guidance=guidance,
+    x_final, pinfo = execute_program(
+        spec, program,
+        {"large": (large_fn, large_params), "small": (small_fn, small_params)},
+        x_init,
+        {"large": cond_large, "small": cond_small},
+        uncond=(
+            {"large": uncond_large, "small": uncond_small}
+            if (uncond_large is not None or uncond_small is not None) else None
+        ),
+        capture_traj=capture_traj,
     )
+    hop = pinfo["hops"][0]
     info = {
-        "x_handoff": x_mid,
-        "traj_edge": traj_edge,
-        "traj_device": traj_dev,
+        "x_handoff": hop["x_out"],
+        "traj_edge": pinfo["trajs"][0],
+        "traj_device": pinfo["trajs"][1],
         "edge_steps": plan.s,
         "device_steps": spec.t_device - plan.s_prime,
-        "transfer_bytes": transfer_bytes,
-        "handoff_deviation_pct": handoff_dev,
+        "transfer_bytes": pinfo["transfer_bytes"],
+        "handoff_deviation_pct": pinfo["handoff_deviation_pct"],
     }
     return x_final, info
 

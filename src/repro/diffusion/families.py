@@ -1,4 +1,8 @@
-"""Relay family registry: schedules + net configs + trained parameters."""
+"""Relay family registry: schedules + net configs + trained parameters.
+
+Each family carries a (large, small) pair sharing a latent space — the
+paper's relay setup — plus an optional *mid*-size stage (ladder + net)
+enabling L→M→S cascade programs (``repro.core.program``)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -12,7 +16,8 @@ from repro.core.schedules import karras_sigmas, rf_times
 from repro.models import diffusion_nets as dn
 
 T_EDGE_XL, T_DEV_XL = 50, 25  # SDXL / Vega (Karras, different ladders)
-T_F3 = 50  # SD3.5 L and M (identical linear schedule)
+T_MID_XL = 40  # mid stage ("SSD-1B"): its own Karras ladder → real Eq. 4 hops
+T_F3 = 50  # SD3.5 L and M (identical linear schedule), mid stage likewise
 
 
 def xl_spec() -> FamilySpec:
@@ -20,6 +25,7 @@ def xl_spec() -> FamilySpec:
         name="XL", kind="ddim",
         sigmas_edge=karras_sigmas(T_EDGE_XL),
         sigmas_device=karras_sigmas(T_DEV_XL),
+        sigmas_mid=karras_sigmas(T_MID_XL),
     )
 
 
@@ -28,13 +34,16 @@ def f3_spec() -> FamilySpec:
         name="F3", kind="rf",
         sigmas_edge=rf_times(T_F3),
         sigmas_device=rf_times(T_F3),
+        sigmas_mid=rf_times(T_F3),
     )
 
 
 NET_CONFIGS = {
     ("XL", "large"): dn.XL_LARGE,
+    ("XL", "mid"): dn.XL_MID,
     ("XL", "small"): dn.XL_SMALL,
     ("F3", "large"): dn.F3_LARGE,
+    ("F3", "mid"): dn.F3_MID,
     ("F3", "small"): dn.F3_SMALL,
 }
 
@@ -68,25 +77,52 @@ class Family:
     small_cfg: dn.DiffNetConfig
     large_params: dict
     small_params: dict
+    mid_cfg: Optional[dn.DiffNetConfig] = None
+    mid_params: Optional[dict] = None
 
-    def large_fn(self, params, x, t, cond):
-        out = dn.apply_net(params, self.large_cfg, x, t, cond)
+    def _apply(self, cfg, params, x, t, cond):
+        out = dn.apply_net(params, cfg, x, t, cond)
         if self.spec.kind == "rf":
             return rf_velocity_from_x0(out, x, t)  # x̂0-parameterized net
         return vp_eps_from_x0(out, x, t)
 
+    def large_fn(self, params, x, t, cond):
+        return self._apply(self.large_cfg, params, x, t, cond)
+
     def small_fn(self, params, x, t, cond):
-        out = dn.apply_net(params, self.small_cfg, x, t, cond)
-        if self.spec.kind == "rf":
-            return rf_velocity_from_x0(out, x, t)
-        return vp_eps_from_x0(out, x, t)
+        return self._apply(self.small_cfg, params, x, t, cond)
+
+    def mid_fn(self, params, x, t, cond):
+        if self.mid_cfg is None:
+            raise ValueError(
+                f"family {self.spec.name} has no mid-size net (train with "
+                f"with_mid=True to enable cascade programs)"
+            )
+        return self._apply(self.mid_cfg, params, x, t, cond)
+
+    @property
+    def has_mid(self) -> bool:
+        return self.mid_params is not None
 
 
-def make_family(name: str, large_params, small_params) -> Family:
+def role_fn(family, role: str):
+    """Denoiser callable of a model role — works for :class:`Family` and
+    for the duck-typed toy families the tests build."""
+    return getattr(family, f"{role}_fn")
+
+
+def role_params(family, role: str):
+    return getattr(family, f"{role}_params")
+
+
+def make_family(name: str, large_params, small_params,
+                mid_params=None) -> Family:
     return Family(
         spec=SPECS[name](),
         large_cfg=NET_CONFIGS[(name, "large")],
         small_cfg=NET_CONFIGS[(name, "small")],
         large_params=large_params,
         small_params=small_params,
+        mid_cfg=NET_CONFIGS[(name, "mid")],
+        mid_params=mid_params,
     )

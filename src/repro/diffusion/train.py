@@ -248,12 +248,18 @@ def finetune_on_trajectories(
 
 
 def get_or_train_families(
-    ckpt_dir="results/ckpts", *, steps=400, batch=64, verbose=False, families=("XL", "F3")
+    ckpt_dir="results/ckpts", *, steps=400, batch=64, verbose=False,
+    families=("XL", "F3"), with_mid=False,
 ):
-    """Train (or load cached) relay families — shared by benchmarks/examples."""
+    """Train (or load cached) relay families — shared by benchmarks/examples.
+
+    ``with_mid=True`` additionally loads/trains each family's mid-size
+    cascade stage (distilled from the large model, like the small one) —
+    cached in its own ``diffusion_<fam>_mid.ckpt`` so existing pair
+    checkpoints stay valid."""
     from pathlib import Path
 
-    from repro.diffusion.families import make_family
+    from repro.diffusion.families import NET_CONFIGS, make_family
     from repro.training import checkpoint as ckpt
 
     out = {}
@@ -261,28 +267,42 @@ def get_or_train_families(
         path = Path(ckpt_dir) / f"diffusion_{fam}.ckpt"
         if path.exists():
             key = jax.random.PRNGKey(100 + i)
-            large0 = dn.init_net(key, __import__(
-                "repro.diffusion.families", fromlist=["NET_CONFIGS"]
-            ).NET_CONFIGS[(fam, "large")])
-            small0 = dn.init_net(key, __import__(
-                "repro.diffusion.families", fromlist=["NET_CONFIGS"]
-            ).NET_CONFIGS[(fam, "small")])
+            large0 = dn.init_net(key, NET_CONFIGS[(fam, "large")])
+            small0 = dn.init_net(key, NET_CONFIGS[(fam, "small")])
             tree, _ = ckpt.restore(path, {"large": large0, "small": small0})
-            out[fam] = make_family(fam, tree["large"], tree["small"])
-            continue
-        if verbose:
-            print(f"training family {fam} ({steps} steps each)...")
-        large, small, _ = train_family_pair(
-            jax.random.PRNGKey(100 + i), fam,
-            steps_large=steps, steps_small=steps, batch=batch, verbose=verbose,
-        )
-        # final alignment stage: trajectory-matched distillation (tightens
-        # the Fig. 2 ρ_t deviation — see EXPERIMENTS.md)
-        if steps >= 300:
-            small = finetune_on_trajectories(
-                jax.random.PRNGKey(200 + i), fam, large, small,
-                steps=min(350, steps), verbose=verbose,
+            large, small = tree["large"], tree["small"]
+        else:
+            if verbose:
+                print(f"training family {fam} ({steps} steps each)...")
+            large, small, _ = train_family_pair(
+                jax.random.PRNGKey(100 + i), fam,
+                steps_large=steps, steps_small=steps, batch=batch,
+                verbose=verbose,
             )
-        ckpt.save(path, {"large": large, "small": small})
-        out[fam] = make_family(fam, large, small)
+            # final alignment stage: trajectory-matched distillation
+            # (tightens the Fig. 2 ρ_t deviation — see EXPERIMENTS.md)
+            if steps >= 300:
+                small = finetune_on_trajectories(
+                    jax.random.PRNGKey(200 + i), fam, large, small,
+                    steps=min(350, steps), verbose=verbose,
+                )
+            ckpt.save(path, {"large": large, "small": small})
+        mid = None
+        if with_mid:
+            mid_path = Path(ckpt_dir) / f"diffusion_{fam}_mid.ckpt"
+            if mid_path.exists():
+                mid0 = dn.init_net(jax.random.PRNGKey(300 + i),
+                                   NET_CONFIGS[(fam, "mid")])
+                tree, _ = ckpt.restore(mid_path, {"mid": mid0})
+                mid = tree["mid"]
+            else:
+                if verbose:
+                    print(f"distilling mid-size {fam} stage ({steps} steps)...")
+                mid, _ = train_model(
+                    jax.random.PRNGKey(300 + i), fam, "mid", steps=steps,
+                    batch=batch, teacher=(large, NET_CONFIGS[(fam, "large")]),
+                    verbose=verbose,
+                )
+                ckpt.save(mid_path, {"mid": mid})
+        out[fam] = make_family(fam, large, small, mid_params=mid)
     return out

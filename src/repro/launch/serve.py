@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import warnings
 
 import numpy as np
 
@@ -17,18 +16,11 @@ import numpy as np
 def resolve_runtime_config(runtime: str, no_compress: bool):
     """RuntimeConfig for the chosen runtime.
 
-    The sequential fallback has no latent-handoff transport, so
-    ``--no-compress`` is inert there — warn instead of silently ignoring
-    it (covered by tests/test_serving.py)."""
-    if runtime == "sequential":
-        if no_compress:
-            warnings.warn(
-                "--no-compress has no effect with the sequential runtime: "
-                "only the continuous runtime models the latent handoff "
-                "transport (drop the flag or use --runtime continuous)",
-                UserWarning, stacklevel=2,
-            )
-        return None
+    Both runtimes consume the transport knobs: the sequential engine
+    prices inter-segment hops (and applies the measured quality delta)
+    through the same :class:`HandoffTransport` the continuous runtime
+    uses, so ``--no-compress`` is meaningful either way.  The batching
+    knobs (buckets, linger) apply to the continuous runtime only."""
     from repro.serving.runtime import RuntimeConfig
 
     return RuntimeConfig(compress_handoff=not no_compress)
@@ -49,7 +41,7 @@ def main(argv=None):
                          "injection; sequential = paper-faithful blocking loop")
     ap.add_argument("--no-compress", action="store_true",
                     help="disable int8 latent handoff compression "
-                         "(continuous runtime only)")
+                         "(hop pricing + quality delta, both runtimes)")
     ap.add_argument("--telemetry-context", action="store_true",
                     help="append live runtime telemetry (queue depth, batch "
                          "occupancy) to the LinUCB context vector")

@@ -35,6 +35,10 @@ XL_LARGE = DiffNetConfig("unet", width=32, depth=2)  # "SDXL"
 XL_SMALL = DiffNetConfig("unet", width=16, depth=1)  # "Segmind-Vega"
 F3_LARGE = DiffNetConfig("mmdit", width=64, depth=3)  # "SD3.5 Large"
 F3_SMALL = DiffNetConfig("mmdit", width=32, depth=2)  # "SD3.5 Medium"
+# mid-size cascade stages (N-hop relay programs): capacity between the
+# family's large and small scales, same latent space
+XL_MID = DiffNetConfig("unet", width=24, depth=2)  # "SSD-1B"-like
+F3_MID = DiffNetConfig("mmdit", width=48, depth=2)  # distilled mid SD3.5
 
 
 def _conv_init(key, kh, kw, cin, cout):

@@ -1,40 +1,166 @@
-"""Action space (paper Table II): 11 arms = Vega standalone, SDXL+Vega relay
-× s∈{5,10,15,20,25}, SD3.5-L+M relay × s∈{5,10,15,20,25}."""
+"""Action space as relay-program templates.
+
+The paper's Table II action space (11 arms = Vega standalone, SDXL+Vega
+relay × s∈{5,10,15,20,25}, SD3.5-L+M relay × s∈{5,10,15,20,25}) is one
+instantiation of a *dynamic action-space builder* over the segmented
+relay-program IR (``repro.core.program``): every arm wraps a
+:class:`RelayProgram`, and N-hop cascade arms (e.g. SDXL→SSD-1B→Vega) are
+built by the same machinery — :func:`build_action_space` with a
+``cascades`` argument, or :func:`cascade_action_space` for the shipped
+L→M→S program set.
+
+Legacy consumers keep working: ``arm.family`` / ``arm.relay_step`` /
+``arm.edge_pool`` / ``arm.device_pool`` are derived views of the program.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from functools import lru_cache
+from typing import Optional, Sequence, Tuple
+
+from repro.core.program import RelayProgram, make_program
 
 RELAY_STEPS = (5, 10, 15, 20, 25)
+
+#: replica pool of each (family, role) model — the paper testbed's four
+#: pools plus the mid-size cascade stages
+FAMILY_POOLS = {
+    "XL": {"large": "sdxl", "mid": "ssd1b", "small": "vega"},
+    "F3": {"large": "sd3l", "mid": "sd3lt", "small": "sd3m"},
+}
+
+#: the shipped 3-hop L→M→S program set: (family, edge steps, mid steps)
+DEFAULT_CASCADES = (
+    ("XL", 5, 10),
+    ("XL", 10, 10),
+    ("XL", 10, 15),
+    ("F3", 5, 10),
+    ("F3", 10, 10),
+    ("F3", 10, 15),
+)
 
 
 @dataclass(frozen=True)
 class Arm:
     idx: int
-    family: Optional[str]  # "XL" | "F3" | None (standalone small)
-    relay_step: Optional[int]  # s, None for standalone
-    edge_pool: Optional[str]  # pool of M_L
-    device_pool: str  # pool of M_S (or the standalone model)
+    program: RelayProgram
     label: str
 
+    # ---- legacy two-hop views -------------------------------------------
+    @property
+    def family(self) -> Optional[str]:
+        """Relay family, or None for a standalone (single-segment) arm —
+        the sentinel every transport/context consumer branches on."""
+        return self.program.family if self.program.is_relay else None
 
-def action_space() -> Tuple[Arm, ...]:
-    arms = [Arm(0, None, None, None, "vega", "vega-standalone")]
-    for i, s in enumerate(RELAY_STEPS):
-        arms.append(Arm(1 + i, "XL", s, "sdxl", "vega", f"sdxl+vega@s={s}"))
-    for i, s in enumerate(RELAY_STEPS):
-        arms.append(Arm(6 + i, "F3", s, "sd3l", "sd3m", f"sd35L+M@s={s}"))
+    @property
+    def relay_step(self) -> Optional[int]:
+        """s of the first handoff (None for standalone arms)."""
+        return self.program.segments[0].stop if self.program.is_relay else None
+
+    @property
+    def edge_pool(self) -> Optional[str]:
+        return self.program.segments[0].pool if self.program.is_relay else None
+
+    @property
+    def device_pool(self) -> str:
+        return self.program.segments[-1].pool
+
+    @property
+    def plan(self):
+        """Legacy :class:`repro.core.relay.RelayPlan` view of the first hop
+        (None for standalone arms)."""
+        from repro.core.relay import plan_view
+
+        return plan_view(self.program)
+
+    @property
+    def n_hops(self) -> int:
+        return self.program.n_hops
+
+
+@lru_cache(maxsize=None)
+def _spec(family: str):
+    from repro.diffusion.families import SPECS
+
+    return SPECS[family]()
+
+
+def standalone_program(family: str = "XL", role: str = "small") -> RelayProgram:
+    """A single-segment program: the family's ``role`` model runs its full
+    ladder on its own pool (the paper's Vega standalone)."""
+    spec = _spec(family)
+    return make_program(spec, [(role, FAMILY_POOLS[family][role], None)])
+
+
+def relay_program(family: str, s: int) -> RelayProgram:
+    """The paper's two-hop relay: large runs s steps, small finishes from
+    the Eq. 4 sigma-matched entry."""
+    spec = _spec(family)
+    pools = FAMILY_POOLS[family]
+    return make_program(
+        spec, [("large", pools["large"], s), ("small", pools["small"], None)]
+    )
+
+
+def cascade_program(family: str, s_large: int, s_mid: int) -> RelayProgram:
+    """A 3-hop L→M→S cascade: large runs ``s_large`` steps, the mid stage
+    continues for ``s_mid`` steps from its sigma-matched entry, the small
+    model finishes — both handoffs sigma-matched per Eq. 4."""
+    spec = _spec(family)
+    pools = FAMILY_POOLS[family]
+    return make_program(
+        spec,
+        [
+            ("large", pools["large"], s_large),
+            ("mid", pools["mid"], s_mid),
+            ("small", pools["small"], None),
+        ],
+    )
+
+
+def build_action_space(
+    relay_steps: Sequence[int] = RELAY_STEPS,
+    families: Sequence[str] = ("XL", "F3"),
+    cascades: Sequence[Tuple[str, int, int]] = (),
+) -> Tuple[Arm, ...]:
+    """Emit an action space of program-template arms.
+
+    The default arguments reproduce the paper's 11-arm Table II space
+    bit-for-bit (same ordering, labels and programs); ``cascades`` appends
+    3-hop L→M→S arms after the two-hop block."""
+    arms = [Arm(0, standalone_program(), "vega-standalone")]
+    for family in families:
+        tag = "sdxl+vega" if family == "XL" else "sd35L+M"
+        for s in relay_steps:
+            arms.append(
+                Arm(len(arms), relay_program(family, s), f"{tag}@s={s}")
+            )
+    for family, s_large, s_mid in cascades:
+        tag = "sdxl+ssd1b+vega" if family == "XL" else "sd35L+mid+M"
+        arms.append(
+            Arm(len(arms), cascade_program(family, s_large, s_mid),
+                f"{tag}@s={s_large}+{s_mid}")
+        )
     return tuple(arms)
 
 
-ARMS = action_space()
+def cascade_action_space() -> Tuple[Arm, ...]:
+    """The legacy 11 arms plus the shipped 3-hop L→M→S program set."""
+    return build_action_space(cascades=DEFAULT_CASCADES)
+
+
+ARMS = build_action_space()
 N_ARMS = len(ARMS)
 
-# pool replica counts (paper testbed: 8×4090 as 4 pools × 2 replicas)
-POOL_REPLICAS = {"sdxl": 2, "sd3l": 2, "sd3m": 2, "vega": 2}
+# pool replica counts (paper testbed: 8×4090 as 4 pools × 2 replicas, plus
+# the mid-size cascade stages — idle unless a cascade arm routes to them)
+POOL_REPLICAS = {
+    "sdxl": 2, "ssd1b": 2, "vega": 2,
+    "sd3l": 2, "sd3lt": 2, "sd3m": 2,
+}
 
 
 def pools_used(arm: Arm) -> Tuple[str, ...]:
-    if arm.edge_pool is None:
-        return (arm.device_pool,)
-    return (arm.edge_pool, arm.device_pool)
+    """Distinct pools an arm's program occupies, in execution order."""
+    return arm.program.pools

@@ -33,11 +33,13 @@ from repro.core.context import CTX_DIM
 #: mask horizon is ``max_queue ×`` this)
 BACKLOG_SECONDS_PER_SLOT = 10.0
 
-#: context load features → the replica pools they aggregate
+#: context load features → the replica pools they aggregate (mid-size
+#: cascade stages fold into their family's feature; idle pools report 0
+#: occupancy so the grouped max is unchanged for non-cascade workloads)
 POOL_GROUPS: Dict[str, Tuple[str, ...]] = {
     "vega": ("vega",),
-    "sdxl": ("sdxl",),
-    "sd3": ("sd3l", "sd3m"),
+    "sdxl": ("sdxl", "ssd1b"),
+    "sd3": ("sd3l", "sd3lt", "sd3m"),
 }
 
 #: extra context dims appended when ``SimConfig.telemetry_context`` is on

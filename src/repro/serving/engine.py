@@ -2,13 +2,21 @@
 pool/replica queueing, arm filtering by availability, reward computation and
 online LinUCB updates.
 
+Arms are relay-program templates (``repro.serving.arms``): the sequential
+loop folds each request through its program's segments, holding every
+replica pool only for the duration of its own segment — an N-hop cascade
+occupies three pools in sequence, never simultaneously.  Hop transfers are
+priced through the same :class:`HandoffTransport` the continuous runtime
+uses, so compressed-handoff latency (and its measured quality delta) is
+modeled identically in both runtimes when a ``RuntimeConfig`` is supplied.
+
 Also provides the fault-tolerance hooks exercised by the tests: replica
 failure injection with pool failover, and straggler re-issue.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -16,11 +24,12 @@ from repro.core.context import Request, context_vector
 from repro.core.policies import Policy
 from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
-from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
+from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
 from repro.serving.runtime.telemetry import FaultCounters
+from repro.serving.runtime.transport import HandoffTransport, TransportConfig
 
 
 @dataclass
@@ -120,14 +129,14 @@ class Record:
 
 def score_and_update(policy, arm_idx: int, ctx: np.ndarray, quality: dict,
                      t_total: float, l_dev: float,
-                     dynamic_reward: bool = True) -> float:
+                     dynamic_reward: bool = True, arms=None) -> float:
     """Reward computation + policy update, shared by the sequential engine
     and the continuous runtime so their Records stay bit-compatible.
 
     The ablation flag changes only the LEARNING signal; reported rewards
     always use the full dynamic shaping so variants are comparable
     (Table IV protocol).  Returns the reported reward."""
-    arm = ARMS[arm_idx]
+    arm = (arms if arms is not None else ARMS)[arm_idx]
     ri = RewardInputs(
         quality=quality, t_total=t_total, m_vram=lat.arm_vram(arm),
         l_dev=l_dev, c_txt=ctx[1], c_pref=ctx[4], c_bat=ctx[3],
@@ -141,7 +150,8 @@ def score_and_update(policy, arm_idx: int, ctx: np.ndarray, quality: dict,
 class ServingEngine:
     def __init__(self, policy: Policy, quality_table, cfg: SimConfig,
                  executor=None, seed0: int = 0, dynamic_reward: bool = True,
-                 runtime: str = "continuous", runtime_cfg=None):
+                 runtime: str = "continuous", runtime_cfg=None,
+                 arms: Optional[Sequence[Arm]] = None):
         """quality_table[i, arm] → dict of quality metrics for request i.
 
         ``runtime="continuous"`` (the default) delegates to the
@@ -151,7 +161,15 @@ class ServingEngine:
         ``runtime="sequential"`` is the explicit fallback: the original
         paper-faithful blocking per-request loop.  Records, fault counters
         and `summarize()` are interchangeable — the differential parity
-        suite (tests/test_runtime_parity.py) holds the two together."""
+        suite (tests/test_runtime_parity.py) holds the two together.
+
+        ``runtime_cfg`` (a ``RuntimeConfig``) also configures the
+        sequential engine's handoff transport — compressed hop pricing and
+        its quality delta apply identically in both runtimes; without it
+        the sequential engine prices hops uncompressed (legacy behavior).
+
+        ``arms`` swaps the action space (defaults to the paper's 11-arm
+        space) — e.g. ``repro.serving.arms.cascade_action_space()``."""
         self.policy = policy
         self.qt = quality_table
         self.cfg = cfg
@@ -162,9 +180,26 @@ class ServingEngine:
             raise ValueError(f"unknown runtime {runtime!r}")
         self.runtime = runtime
         self.runtime_cfg = runtime_cfg
+        self.arms = tuple(arms) if arms is not None else ARMS
+        policy_arms = getattr(policy, "arms", None)
+        if policy_arms is not None and len(policy_arms) != len(self.arms):
+            raise ValueError(
+                f"policy sized for {len(policy_arms)} arms but the engine's "
+                f"action space has {len(self.arms)} — pass the same arms= to "
+                f"both"
+            )
+        self.transport = (
+            HandoffTransport.for_runtime(runtime_cfg)
+            if runtime_cfg is not None
+            else HandoffTransport(TransportConfig(compress=False))
+        )
         self.telemetry = None  # populated by the continuous runtime
         self.trace = {}  # per-request phase timestamps (continuous only)
         self.fault_counters = FaultCounters()
+
+    @property
+    def n_arms(self) -> int:
+        return len(self.arms)
 
     def _occupancies(self, pools: Pools, now: float) -> dict:
         return aggregate_occupancy(
@@ -172,9 +207,9 @@ class ServingEngine:
         )
 
     def _avail(self, pools: Pools, now: float) -> np.ndarray:
-        out = np.zeros(N_ARMS, bool)
+        out = np.zeros(self.n_arms, bool)
         horizon = backlog_horizon(self.cfg)
-        for a in ARMS:
+        for a in self.arms:
             out[a.idx] = all(
                 pools.backlog(p, now) < horizon for p in pools_used(a)
             )
@@ -199,6 +234,7 @@ class ServingEngine:
             rt = ContinuousRuntime(
                 self.policy, self.qt, self.cfg, self.runtime_cfg,
                 executor=self.executor, dynamic_reward=self.dynamic_reward,
+                arms=self.arms,
             )
             records = rt.run(requests)
             self.telemetry = rt.telemetry
@@ -220,12 +256,17 @@ class ServingEngine:
             ctx = context_vector(req, occ, self._ctx_extra(pools, now))
             avail = self._avail(pools, now)
             if not avail.any():
-                avail = np.ones(N_ARMS, bool)  # enqueue on everything busy
+                avail = np.ones(self.n_arms, bool)  # enqueue on everything busy
             arm_idx = self.policy.select(ctx, avail)
-            arm = ARMS[arm_idx]
+            arm = self.arms[arm_idx]
+            prog = arm.program
 
-            plan = self.executor.plan(arm) if self.executor else _static_plan(arm)
-            lb = lat.arm_latency(arm, plan, req.rtt_ms, rng=self.rng)
+            lb = lat.program_latency(
+                prog, req.rtt_ms, rng=self.rng,
+                compressed=self.transport.cfg.compress,
+                bw_mbps=self.transport.cfg.bw_mbps,
+            )
+            seg_durs = list(lb.segment_s)
 
             # straggler injection + mitigation: this engine's batches are
             # singletons, so per-item and whole-batch re-issue coincide —
@@ -233,33 +274,38 @@ class ServingEngine:
             # the reissue× cap (lat.reissue_latency).  The split comes from
             # the same shared partition the continuous runtime uses on its
             # micro-batches, so fault counters match it for the same
-            # workload in either mitigation mode.
+            # workload in either mitigation mode.  Stragglers hit the
+            # first (edge) segment of relay programs only.
             kept_slow, tripped, draws = partition_stragglers(
                 self.cfg, [req.rid]
             )
-            if tripped:
-                edge_dur = lat.reissue_latency(
-                    lb.edge_s, self.cfg.straggler_reissue
-                )
-            else:
-                edge_dur = lb.edge_s * kept_slow
-            if draws[req.rid] > 1.0 and arm.edge_pool is not None:
-                fc.note_straggler(bool(tripped), per_item=per_item)
+            if prog.is_relay:
+                if tripped:
+                    seg_durs[0] = lat.reissue_latency(
+                        seg_durs[0], self.cfg.straggler_reissue
+                    )
+                else:
+                    seg_durs[0] = seg_durs[0] * kept_slow
+                if draws[req.rid] > 1.0:
+                    fc.note_straggler(bool(tripped), per_item=per_item)
 
-            if arm.edge_pool is not None:
-                edge_done = pools.acquire(arm.edge_pool, now, edge_dur)
-                dev_ready = edge_done + lb.transfer_s
-            else:
-                dev_ready = now
-            done = pools.acquire(arm.device_pool, dev_ready, lb.device_s)
+            # segment-level pool holds: each pool is occupied only for the
+            # duration of its own segment; hops add wire latency between
+            ready = now
+            done = now
+            for k, seg in enumerate(prog.segments):
+                done = pools.acquire(seg.pool, ready, seg_durs[k])
+                ready = done + (lb.hop_s[k] if k < prog.n_hops else 0.0)
             t_total = done - req.arrival
             wait = t_total - lb.total
 
-            q = self.qt[req.rid, arm_idx]
+            q = self.transport.quality_delta(
+                arm.family, self.qt[req.rid, arm_idx], n_hops=arm.n_hops
+            )
             l_dev = max(occ[pool_key(p)] for p in pools_used(arm))
             r_report = score_and_update(
                 self.policy, arm_idx, ctx, q, t_total, l_dev,
-                dynamic_reward=self.dynamic_reward,
+                dynamic_reward=self.dynamic_reward, arms=self.arms,
             )
             records.append(
                 Record(req.rid, arm_idx, r_report, t_total, q, ctx, wait)
@@ -272,15 +318,14 @@ def _pool_key(pool: str) -> str:
 
 
 def _static_plan(arm):
-    from repro.core.relay import make_relay_plan
-    from repro.diffusion.families import SPECS
-
-    if arm.family is None:
-        return None
-    return make_relay_plan(SPECS[arm.family](), arm.relay_step)
+    """Legacy helper: the two-hop plan view an arm's program carries."""
+    return arm.plan
 
 
-def summarize(records: List[Record]) -> dict:
+def summarize(records: List[Record], n_arms: Optional[int] = None) -> dict:
+    """``n_arms`` sizes the arm histogram (pass the action-space length for
+    non-default spaces so histograms align across runs; defaults to the
+    Table II width)."""
     qs = [r.quality for r in records]
     arr = lambda k: np.array([q[k] for q in qs])
     # gate on the request's wants_text flag (ctx[1]), not on ocr > 0: a text
@@ -305,7 +350,7 @@ def summarize(records: List[Record]) -> dict:
         "ocr": float(np.mean(arr("ocr")[has_text])) if has_text.any() else 0.0,
         "text_fraction": float(np.mean(has_text)),
         "arm_histogram": np.bincount(
-            [r.arm for r in records], minlength=N_ARMS
+            [r.arm for r in records], minlength=n_arms or N_ARMS
         ).tolist(),
     }
 

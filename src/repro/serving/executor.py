@@ -1,105 +1,191 @@
-"""Arm executor: runs the actual JAX relay pipelines for every arm and
+"""Arm executor: runs the actual JAX relay programs for every arm and
 produces per-(prompt, arm) quality measurements via the oracles.
 
-Generation is batched over prompts and jitted per arm (11 fixed relay
-configurations → 11 compiled programs)."""
+Generation is batched over prompts and compiled through a **shape-keyed
+program cache**: each arm's :class:`RelayProgram` is lowered to a pipeline
+of per-segment jitted samplers whose ladder *bounds are traced inputs*
+(``lax.fori_loop``), so every arm sharing a program shape — same family,
+role sequence, guidance and per-hop compression — shares one compiled
+pipeline regardless of its relay step.  The legacy 11-arm space compiles 3
+pipelines instead of 11 (hit rates in :meth:`Executor.cache_stats`).
+Latent buffers are donated at segment boundaries on backends that support
+donation (the handoff consumes the upstream latent), and the hot path
+never materializes trajectory stacks (``capture_traj=False``)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import samplers
-from repro.core.relay import make_relay_plan, relay_generate
+from repro.core.program import RelayProgram
 from repro.diffusion import synth
-from repro.diffusion.families import Family
+from repro.diffusion.families import Family, role_fn, role_params
 from repro.serving import metrics
 from repro.serving.arms import ARMS, Arm
 
 
+def _donate_argnums():
+    """Donate the latent at segment boundaries where the backend supports
+    it (donation is a no-op warning on CPU)."""
+    return (1,) if jax.default_backend() in ("gpu", "tpu") else ()
+
+
 class Executor:
-    def __init__(self, families: Dict[str, Family]):
+    def __init__(self, families: Dict[str, Family],
+                 arms: Optional[Sequence[Arm]] = None):
         self.families = families
-        self.plans = {}
-        for arm in ARMS:
-            if arm.family is not None:
-                self.plans[arm.idx] = make_relay_plan(
-                    families[arm.family].spec, arm.relay_step
-                )
-        self._gen_fns = {}
+        self.arms = tuple(arms) if arms is not None else ARMS
+        self._pipelines = {}  # shape key -> composed program runner
+        self._seg_fns = {}  # (family, role, guidance) -> jitted segment fn
+        self._noise_fns = {}  # (latent_shape, per_key) -> jitted noise fn
+        self._hop_fns = {}  # quantizer -> jitted latent roundtrip
+        self._requests = 0  # pipeline lookups (cache-hit-rate telemetry)
 
     def plan(self, arm: Arm):
-        return self.plans.get(arm.idx)
+        """Legacy two-hop plan view (None for standalone arms)."""
+        return arm.plan
 
-    def _build_fn(self, arm: Arm, make_noise):
-        """Jitted generator for one arm; ``make_noise(rng, cond, shape)``
-        supplies the initial latent batch (single-key or per-sample-key)."""
-        if arm.family is None:
-            fam = self.families["XL"]  # Vega standalone
+    # ------------------------------------------------------------------
+    # shape-keyed compile cache
+    # ------------------------------------------------------------------
 
-            def fn(rng, cond):
-                x = make_noise(rng, cond, fam.spec.latent_shape)
-                out, _ = samplers.ddim_sample(
-                    fam.small_fn, fam.small_params, x, fam.spec.sigmas_device, cond
+    def _noise_fn(self, shape, per_key: bool):
+        key = (tuple(shape), per_key)
+        if key not in self._noise_fns:
+            if per_key:
+                # per-sample PRNG keys: each sample's initial noise depends
+                # only on its own key, so outputs are invariant to the
+                # pad-to-bucket batch shape (a batched draw from one key
+                # would change every sample whenever the bucket changes)
+                fn = lambda keys, cond: jax.vmap(
+                    lambda k: jax.random.normal(k, tuple(shape))
+                )(keys)
+            else:
+                fn = lambda key, cond: jax.random.normal(
+                    key, (cond.shape[0],) + tuple(shape)
+                )
+            self._noise_fns[key] = jax.jit(fn)
+        return self._noise_fns[key]
+
+    def _segment_fn(self, family: str, role: str, guidance: float):
+        """One jitted sampler per (family, role, guidance): the ladder slice
+        bounds are traced int32 inputs, so every relay step of a family
+        reuses this single compiled segment."""
+        key = (family, role, guidance)
+        if key not in self._seg_fns:
+            fam = self.families[family]
+            net = role_fn(fam, role)
+            sigmas = fam.spec.ladder(role)
+            sample = samplers.sampler_for(fam.spec.kind)
+
+            def fn(params, x, cond, start, stop):
+                out, _ = sample(
+                    net, params, x, sigmas, cond, start=start, stop=stop,
+                    guidance=guidance, capture_traj=False,
                 )
                 return out
 
-        else:
-            fam = self.families[arm.family]
-            plan = self.plans[arm.idx]
+            self._seg_fns[key] = jax.jit(fn, donate_argnums=_donate_argnums())
+        return self._seg_fns[key]
 
-            def fn(rng, cond):
-                x = make_noise(rng, cond, fam.spec.latent_shape)
-                out, _ = relay_generate(
-                    fam.spec, plan, fam.large_fn, fam.large_params,
-                    fam.small_fn, fam.small_params, x, cond, cond,
-                )
-                return out
+    def _hop_fn(self, quantizer: str):
+        if quantizer not in self._hop_fns:
+            from repro.quantization import latent_roundtrip
 
-        return jax.jit(fn)
-
-    def _gen_fn(self, arm: Arm):
-        if arm.idx not in self._gen_fns:
-            self._gen_fns[arm.idx] = self._build_fn(
-                arm,
-                lambda key, cond, shape: jax.random.normal(
-                    key, (cond.shape[0],) + shape
-                ),
+            self._hop_fns[quantizer] = jax.jit(
+                lambda x: latent_roundtrip(x, quantizer)[0],
+                donate_argnums=_donate_argnums() and (0,),
             )
-        return self._gen_fns[arm.idx]
+        return self._hop_fns[quantizer]
+
+    def _pipeline(self, program: RelayProgram, latent_shape, per_key: bool):
+        """Composed runner for a program shape: noise → segments × handoffs.
+        Segment bounds arrive as call-time int32 arguments, so programs
+        sharing a shape share this runner *and* its compiled pieces."""
+        self._requests += 1
+        shape = (program.shape_key(), tuple(latent_shape), per_key)
+        if shape in self._pipelines:
+            return self._pipelines[shape]
+        fam = self.families[program.family]
+        if (isinstance(fam, Family) and not fam.has_mid
+                and any(s.model == "mid" for s in program.segments)):
+            raise ValueError(
+                f"family {program.family} has no trained mid-size stage — "
+                f"load families with with_mid=True to run cascade programs"
+            )
+        noise = self._noise_fn(latent_shape, per_key)
+        seg_fns = [
+            self._segment_fn(program.family, seg.model, seg.guidance)
+            for seg in program.segments
+        ]
+        roles = [seg.model for seg in program.segments]
+        hop_fns = [
+            self._hop_fn(h.quantizer) if h.compress else None
+            for h in program.handoffs
+        ]
+
+        def run(key, cond, bounds):
+            x = noise(key, cond)
+            for k, (fn, role) in enumerate(zip(seg_fns, roles)):
+                x = fn(role_params(fam, role), x, cond, *bounds[k])
+                if k < len(hop_fns) and hop_fns[k] is not None:
+                    x = hop_fns[k](x)
+            return x
+
+        self._pipelines[shape] = run
+        return run
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Shape-cache telemetry: how many distinct compiled pipelines back
+        the requested arm programs (the dedup the shape key buys)."""
+        return {
+            "pipeline_requests": self._requests,
+            "pipelines_compiled": len(self._pipelines),
+            "segment_fns_compiled": len(self._seg_fns),
+            "noise_fns_compiled": len(self._noise_fns),
+            "cache_hit_rate": (
+                1.0 - len(self._pipelines) / self._requests
+                if self._requests else 0.0
+            ),
+        }
+
+    # ------------------------------------------------------------------
+    # generation
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _bounds(program: RelayProgram):
+        return tuple(
+            (jnp.int32(seg.start), jnp.int32(seg.stop))
+            for seg in program.segments
+        )
+
+    def _run(self, arm: Arm, key_or_keys, cond, per_key: bool):
+        prog = arm.program
+        fam = self.families[prog.family]
+        run = self._pipeline(prog, fam.spec.latent_shape, per_key)
+        return run(key_or_keys, cond, self._bounds(prog))
 
     def generate(self, arm: Arm, seeds: np.ndarray) -> np.ndarray:
         family = arm.family or "XL"
         _, _, cond = synth.batch(seeds, family)
         key = jax.random.PRNGKey(int(seeds[0]) * 7919 + arm.idx)
-        return np.asarray(self._gen_fn(arm)(key, jnp.asarray(cond)))
-
-    def _gen_fn_per_key(self, arm: Arm):
-        """Like ``_gen_fn`` but takes per-sample PRNG keys: each sample's
-        initial noise depends only on its own key, so outputs are invariant
-        to the pad-to-bucket batch shape (a batched draw from one key would
-        change every sample whenever the bucket changes)."""
-        cache_key = ("per_key", arm.idx)
-        if cache_key not in self._gen_fns:
-            self._gen_fns[cache_key] = self._build_fn(
-                arm,
-                lambda keys, cond, shape: jax.vmap(
-                    lambda k: jax.random.normal(k, shape)
-                )(keys),
-            )
-        return self._gen_fns[cache_key]
+        return np.asarray(
+            self._run(arm, key, jnp.asarray(cond), per_key=False)
+        )
 
     def generate_bucketed(self, arm: Arm, seeds: np.ndarray,
                           buckets=(1, 2, 4, 8), subset=None) -> np.ndarray:
         """Pad-to-bucket batched generation: the runtime aggregator's
         contract that each arm compiles at most ``len(buckets)`` programs
-        regardless of micro-batch size.  Per-sample PRNG keys (folded from
-        each seed) make every sample's output identical whichever bucket
-        its micro-batch lands in; padded slots re-run the last seed and
-        are sliced off.
+        regardless of micro-batch size (fewer still, now that arms sharing
+        a program shape share compiled pipelines).  Per-sample PRNG keys
+        (folded from each seed) make every sample's output identical
+        whichever bucket its micro-batch lands in; padded slots re-run the
+        last seed and are sliced off.
 
         ``subset`` — optional indices into ``seeds``: partial-batch
         re-execution, the straggler re-issue path.  Only the selected
@@ -126,14 +212,24 @@ class Executor:
         keys = jax.vmap(lambda s: jax.random.fold_in(base, s))(
             jnp.asarray(seeds, jnp.int32)
         )
-        return np.asarray(self._gen_fn_per_key(arm)(keys, jnp.asarray(cond)))[:n]
+        return np.asarray(
+            self._run(arm, keys, jnp.asarray(cond), per_key=True)
+        )[:n]
 
     def quality_table(self, seeds: np.ndarray, arms=None) -> np.ndarray:
         """(N, n_arms) array of metric dicts — precomputed for the event sim
-        and the offline policy training."""
-        arms = arms if arms is not None else ARMS
+        and the offline policy training.  ``arms`` may restrict which
+        columns are filled but must be a subset of this executor's action
+        space (columns are indexed by ``arm.idx``)."""
+        arms = arms if arms is not None else self.arms
+        bad = [a.label for a in arms if a.idx >= len(self.arms)]
+        if bad:
+            raise ValueError(
+                f"arms outside this executor's {len(self.arms)}-arm action "
+                f"space: {bad} — construct the Executor with those arms"
+            )
         prompts = [synth.sample_prompt(int(s)) for s in seeds]
-        table = np.empty((len(seeds), len(ARMS)), dtype=object)
+        table = np.empty((len(seeds), len(self.arms)), dtype=object)
         for arm in arms:
             gen = self.generate(arm, seeds)
             for i, p in enumerate(prompts):

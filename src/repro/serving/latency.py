@@ -4,40 +4,51 @@ denoise times (Table III):
   SDXL 50 steps = 6.87 s → 137.4 ms/step        Vega: 71.3 ms/step
   SD3.5-L 50 steps = 30.19 s → 603.8 ms/step    SD3.5-M: 229.7 ms/step
 
-Relay latency = s·step_L + (T_d − s')·step_S + transfer(latent) + queueing.
-The same arithmetic yields the paper's 2.10×/1.59× (XL) and 1.77×/1.59× (F3)
-speedups — reproduced in benchmarks/table3_relay_quality.py.  Network and
+plus interpolated mid-size cascade stages (SSD-1B-like for XL, a distilled
+mid SD3.5 for F3).  Latency is derived *per program segment*:
+
+  t(program) = Σ_k steps_k · step_cost(pool_k) · jitter_k  +  Σ_hops transfer
+
+with independent jitter draws per segment (each segment runs on its own
+replica).  For the paper's two-hop arms this reduces to the familiar
+``s·step_L + (T_d − s')·step_S + transfer(latent) + queueing`` arithmetic —
+the same numbers yield the paper's 2.10×/1.59× (XL) and 1.77×/1.59× (F3)
+speedups, reproduced in benchmarks/table3_relay_quality.py.  Network and
 battery are simulated (as in the paper's own testbed).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.relay import FamilySpec, RelayPlan
+from repro.core.program import RelayProgram
 from repro.serving.arms import Arm
 
 STEP_COST = {  # seconds per denoising step
     "sdxl": 0.1374,
+    "ssd1b": 0.0982,  # mid XL cascade stage
     "vega": 0.0713,
     "sd3l": 0.6038,
+    "sd3lt": 0.3810,  # mid F3 cascade stage
     "sd3m": 0.2297,
 }
 
-VRAM_GB = {"sdxl": 8.5, "vega": 3.2, "sd3l": 19.0, "sd3m": 6.5}
+VRAM_GB = {"sdxl": 8.5, "ssd1b": 5.8, "vega": 3.2,
+           "sd3l": 19.0, "sd3lt": 12.0, "sd3m": 6.5}
 
 LATENT_BYTES = {"XL": 128 * 128 * 4 * 2, "F3": 128 * 128 * 16 * 2}  # fp16 @1024²
 LATENT_CHANNELS = {"XL": 4, "F3": 16}
 
-T_FULL = {"sdxl": 50, "vega": 25, "sd3l": 50, "sd3m": 50}
+T_FULL = {"sdxl": 50, "ssd1b": 40, "vega": 25,
+          "sd3l": 50, "sd3lt": 50, "sd3m": 50}
 
 SCALE_BYTES = 4  # fp32 quantizer scale, one per channel row
 
 
 def latent_wire_bytes(family: Optional[str], compressed: bool = False) -> int:
-    """Bytes on the wire for one edge→device latent handoff.
+    """Bytes on the wire for one inter-segment latent handoff.
 
     Uncompressed: the fp16 latent as-is.  Compressed: the row-wise int8
     payload (one byte per element) plus one fp32 scale per channel row —
@@ -51,15 +62,30 @@ def latent_wire_bytes(family: Optional[str], compressed: bool = False) -> int:
     return elems + LATENT_CHANNELS[family] * SCALE_BYTES
 
 
-@dataclass
+@dataclass(frozen=True)
 class LatencyBreakdown:
-    edge_s: float
-    device_s: float
-    transfer_s: float
+    """Per-segment denoise times and per-hop transfer times of one program
+    execution.  The legacy two-pool fields (``edge_s`` / ``device_s`` /
+    ``transfer_s``) are views: first segment / last segment / total wire."""
+
+    segment_s: Tuple[float, ...]
+    hop_s: Tuple[float, ...] = ()
+
+    @property
+    def edge_s(self) -> float:
+        return self.segment_s[0] if len(self.segment_s) > 1 else 0.0
+
+    @property
+    def device_s(self) -> float:
+        return self.segment_s[-1]
+
+    @property
+    def transfer_s(self) -> float:
+        return sum(self.hop_s)
 
     @property
     def total(self) -> float:
-        return self.edge_s + self.device_s + self.transfer_s
+        return sum(self.segment_s) + sum(self.hop_s)
 
 
 def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
@@ -70,22 +96,62 @@ def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
     return rtt_ms / 1000.0 + payload * 8 / (bw_mbps * 1e6)
 
 
-def arm_latency(arm: Arm, plan: Optional[RelayPlan], rtt_ms: float,
-                rng: Optional[np.random.Generator] = None) -> LatencyBreakdown:
-    """Denoise + transfer latency for one arm (no queueing)."""
-    jitter = 1.0
-    if rng is not None:
-        jitter = float(np.clip(rng.normal(1.0, 0.03), 0.9, 1.15))
-    if arm.family is None:  # standalone small model on-device: no transfer
-        dev = STEP_COST[arm.device_pool] * T_FULL[arm.device_pool]
-        return LatencyBreakdown(0.0, dev * jitter, 0.0)
-    edge = STEP_COST[arm.edge_pool] * plan.s
-    dev = STEP_COST[arm.device_pool] * (
-        T_FULL[arm.device_pool] - plan.s_prime
+def _jitter(rng: Optional[np.random.Generator]) -> float:
+    if rng is None:
+        return 1.0
+    return float(np.clip(rng.normal(1.0, 0.03), 0.9, 1.15))
+
+
+def program_latency(program: RelayProgram, rtt_ms: float,
+                    rng: Optional[np.random.Generator] = None, *,
+                    compressed: Optional[bool] = None,
+                    bw_mbps: float = 20.0) -> LatencyBreakdown:
+    """Denoise + transfer latency of one program execution (no queueing).
+
+    Each segment draws its own jitter (it runs on its own replica); each
+    hop is priced at the latent wire size.  ``compressed=None`` honors
+    every handoff's own per-hop compression choice; a bool overrides all
+    hops (how the engines apply their transport configuration)."""
+    segs = tuple(
+        STEP_COST[seg.pool] * seg.steps * _jitter(rng)
+        for seg in program.segments
     )
-    return LatencyBreakdown(
-        edge * jitter, dev * jitter, transfer_time(arm.family, rtt_ms)
+    fam = program.family if program.is_relay else None
+    hops = tuple(
+        transfer_time(
+            fam, rtt_ms, bw_mbps=bw_mbps,
+            compressed=h.compress if compressed is None else compressed,
+        )
+        for h in program.handoffs
     )
+    return LatencyBreakdown(segs, hops)
+
+
+def program_wire_bytes(program: RelayProgram,
+                       compressed: Optional[bool] = None) -> int:
+    """Total bytes-on-wire of a program's handoffs (0 for standalone)."""
+    fam = program.family if program.is_relay else None
+    return sum(
+        latent_wire_bytes(
+            fam, compressed=h.compress if compressed is None else compressed
+        )
+        for h in program.handoffs
+    )
+
+
+def program_vram(program: RelayProgram) -> float:
+    """Peak model VRAM across the program's segments (segments hold their
+    pools one at a time, so the peak is the max, not the sum)."""
+    return max(VRAM_GB[seg.pool] for seg in program.segments)
+
+
+def arm_latency(arm: Arm, plan=None, rtt_ms: float = 0.0,
+                rng: Optional[np.random.Generator] = None,
+                compressed: bool = False) -> LatencyBreakdown:
+    """Denoise + transfer latency for one arm (no queueing).  ``plan`` is
+    accepted for backwards compatibility and ignored — the arm's program
+    already carries the sigma-matched segment bounds."""
+    return program_latency(arm.program, rtt_ms, rng, compressed=compressed)
 
 
 def batch_service_time(pool: str, steps: int, batch: int,
@@ -114,7 +180,4 @@ def full_model_latency(pool: str) -> float:
 
 
 def arm_vram(arm: Arm) -> float:
-    v = VRAM_GB[arm.device_pool]
-    if arm.edge_pool:
-        v = max(v, VRAM_GB[arm.edge_pool])
-    return v
+    return program_vram(arm.program)

@@ -1,11 +1,12 @@
 """Per-pool micro-batch aggregator with pad-to-bucket shapes.
 
-Queued work items that share a :class:`BatchKey` — (pool, family,
-relay_step, phase) — run the *same* jitted relay program, so they can be
-coalesced into one batched device launch.  Batch sizes are padded up to a
-small set of bucket shapes so each (key, bucket) pair compiles exactly one
-XLA program, mirroring ``Executor``'s per-arm jit cache: with the default
-buckets ``(1, 2, 4, 8)`` a pool hosts at most ``n_keys × 4`` programs.
+Queued work items that share a :class:`BatchKey` — (pool, arm, phase),
+i.e. the same relay-program segment — run the *same* compiled launch, so
+they can be coalesced into one batched device dispatch.  Batch sizes are
+padded up to a small set of bucket shapes so each (key, bucket) pair maps
+to one XLA program shape, mirroring ``Executor``'s shape-keyed compile
+cache (which dedups further: arms sharing a program shape share compiled
+pipelines).
 
 Dispatch is continuous-batching style: whenever a replica frees up the
 aggregator hands over whatever is queued for the oldest key (up to the
@@ -19,8 +20,6 @@ from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.serving.arms import ARMS, Arm
-
 from .events import WorkItem
 
 DEFAULT_BUCKETS = (1, 2, 4, 8)
@@ -28,18 +27,18 @@ DEFAULT_BUCKETS = (1, 2, 4, 8)
 
 @dataclass(frozen=True)
 class BatchKey:
-    """Identity of a jitted relay program: all items sharing a key are
-    shape- and weight-compatible and may be batched together."""
+    """Identity of one relay-program segment's compiled launch: all items
+    sharing a key run the same arm's program at the same segment (hence the
+    same weights, ladder slice and latent shape) and may be batched
+    together."""
 
     pool: str
-    family: Optional[str]
-    relay_step: Optional[int]
+    arm_idx: int
     phase: str
 
 
 def batch_key_for(item: WorkItem) -> BatchKey:
-    arm: Arm = ARMS[item.arm_idx]
-    return BatchKey(item.pool, arm.family, arm.relay_step, item.phase)
+    return BatchKey(item.pool, item.arm_idx, item.phase)
 
 
 def bucketize(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:

@@ -1,19 +1,21 @@
-"""Continuous-batching relay runtime (discrete-event, two-phase).
+"""Continuous-batching relay runtime (discrete-event, N-segment).
 
 Replaces ``ServingEngine``'s sequential per-request loop with an
 event-driven engine built for sustained mixed Poisson traffic:
 
 * **Micro-batch aggregation** — per-pool :class:`MicroBatchAggregator`
-  coalesces queued requests that share an (arm, relay-phase) signature
-  into pad-to-bucket batches, so each pool runs a handful of jitted
-  programs (the ``Executor`` per-arm jit-cache pattern) at sublinear
+  coalesces queued requests that share an (arm, segment) signature into
+  pad-to-bucket batches, so each pool runs a handful of compiled programs
+  (the ``Executor`` shape-keyed compile-cache pattern) at sublinear
   per-item cost.
-* **Two-phase execution** — an edge-phase batch completion does not block
-  its replica: it enqueues per-request latent transfers whose completions
-  enqueue device-phase work items.  Edge and device pools stay
-  independently saturated.
+* **Segment-chained execution** — arms are relay-program templates
+  (``repro.serving.arms``): a completed segment batch does not block its
+  replica, it enqueues per-request latent transfers whose completions
+  enqueue the *next segment's* work items.  A two-hop relay is the
+  edge→device special case; a 3-hop L→M→S cascade chains three pools, each
+  held only for its own segment.
 * **Compressed latent handoff** — the :class:`HandoffTransport` serializes
-  the edge→device latent through the row-wise int8 quantizer, halving
+  every inter-segment latent through the row-wise int8 quantizer, halving
   bytes-on-wire and transfer latency at a measured (tiny) quality delta
   that is fed into the reward, so the LinUCB policy prices the trade.
 * **Backpressure** — arm availability masks out arms whose pools exceed a
@@ -50,21 +52,22 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.context import Request, context_vector
+from repro.core.program import phase_name
 from repro.serving import latency as lat
-from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, pools_used
+from repro.serving.arms import ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
 
 from .batching import DEFAULT_BUCKETS, MicroBatchAggregator, bucketize
-from .events import (ARRIVE, BATCH_DONE, DEVICE, DEVICE_READY, EDGE, FLUSH,
-                     REPLICA_FAIL, REPLICA_RECOVER, STRAGGLER,
-                     STRAGGLER_PARTIAL, EventQueue, WorkItem)
+from .events import (ARRIVE, BATCH_DONE, DEVICE_READY, FLUSH, REPLICA_FAIL,
+                     REPLICA_RECOVER, STRAGGLER, STRAGGLER_PARTIAL,
+                     EventQueue, WorkItem)
 from .telemetry import RuntimeTelemetry
 from .transport import HandoffTransport
 
@@ -100,7 +103,6 @@ class _Pending:
     arm_idx: int
     ctx: np.ndarray
     occ: Dict[str, float]  # decision-time occupancy (reward's l_dev)
-    device_steps: int
     ideal_s: float  # zero-queue latency, for wait accounting
 
 
@@ -125,13 +127,16 @@ class ContinuousRuntime:
     ``ServingEngine`` when ``runtime="continuous"`` (the default)."""
 
     def __init__(self, policy, quality_table, cfg, rt_cfg: Optional[RuntimeConfig] = None,
-                 executor=None, dynamic_reward: bool = True):
+                 executor=None, dynamic_reward: bool = True,
+                 arms: Optional[Sequence[Arm]] = None):
         self.policy = policy
         self.qt = quality_table
         self.cfg = cfg  # SimConfig
         self.rt = rt_cfg or RuntimeConfig()
         self.executor = executor
         self.dynamic_reward = dynamic_reward
+        self.arms = tuple(arms) if arms is not None else ARMS
+        self.n_arms = len(self.arms)
         self.rng = np.random.default_rng(cfg.seed + 17)
         self.transport = HandoffTransport.for_runtime(self.rt)
         self.telemetry = RuntimeTelemetry()
@@ -175,8 +180,8 @@ class ContinuousRuntime:
     def _avail(self, now: float) -> np.ndarray:
         horizon = backlog_horizon(self.cfg)
         backlog = {p: self._backlog(st, now) for p, st in self.pools.items()}
-        out = np.zeros(N_ARMS, bool)
-        for a in ARMS:
+        out = np.zeros(self.n_arms, bool)
+        for a in self.arms:
             out[a.idx] = all(backlog[p] < horizon for p in pools_used(a))
         return out
 
@@ -226,7 +231,7 @@ class ContinuousRuntime:
             elif kind == BATCH_DONE:
                 self._on_batch_done(*payload, now=now)
             elif kind == DEVICE_READY:
-                self._on_device_ready(payload, now)
+                self._on_segment_ready(payload, now)
             elif kind == FLUSH:
                 self._dispatch(payload, now)
             elif kind == STRAGGLER:
@@ -241,42 +246,31 @@ class ContinuousRuntime:
 
     # ------------------------------------------------------------------
 
-    def _plan(self, arm):
-        if self.executor is not None:
-            return self.executor.plan(arm)
-        from repro.serving.engine import _static_plan
-
-        return _static_plan(arm)
+    def _item(self, req: Request, arm_idx: int, seg_idx: int) -> WorkItem:
+        prog = self.arms[arm_idx].program
+        seg = prog.segments[seg_idx]
+        return WorkItem(req, arm_idx, phase_name(prog, seg_idx), seg.pool,
+                        seg.steps, seg_idx=seg_idx)
 
     def _on_arrive(self, req: Request, now: float) -> None:
         occ = self._occupancies(now)
         ctx = context_vector(req, occ, self._ctx_extra(now))
         avail = self._avail(now)
         if not avail.any():
-            avail = np.ones(N_ARMS, bool)  # everything congested: enqueue anyway
+            avail = np.ones(self.n_arms, bool)  # everything congested: enqueue anyway
         arm_idx = self.policy.select(ctx, avail)
-        arm = ARMS[arm_idx]
-        plan = self._plan(arm)
+        arm = self.arms[arm_idx]
+        prog = arm.program
 
-        if arm.family is None:
-            edge_steps, device_steps = 0, lat.T_FULL[arm.device_pool]
-            ideal = device_steps * lat.STEP_COST[arm.device_pool]
-        else:
-            edge_steps = plan.s
-            device_steps = lat.T_FULL[arm.device_pool] - plan.s_prime
-            ideal = (
-                edge_steps * lat.STEP_COST[arm.edge_pool]
-                + device_steps * lat.STEP_COST[arm.device_pool]
-                + self.transport.transfer_time(arm.family, req.rtt_ms)
-            )
-        self.pending[req.rid] = _Pending(req, arm_idx, ctx, occ, device_steps, ideal)
+        # zero-queue latency: per-segment denoise + per-hop transfer
+        ideal = sum(
+            seg.steps * lat.STEP_COST[seg.pool] for seg in prog.segments
+        ) + prog.n_hops * self.transport.transfer_time(arm.family, req.rtt_ms)
+        self.pending[req.rid] = _Pending(req, arm_idx, ctx, occ, ideal)
         if self.rt.trace:
             self.trace[req.rid] = {"arrival": now, "arm": arm_idx}
 
-        if arm.family is None:
-            item = WorkItem(req, arm_idx, DEVICE, arm.device_pool, device_steps)
-        else:
-            item = WorkItem(req, arm_idx, EDGE, arm.edge_pool, edge_steps)
+        item = self._item(req, arm_idx, 0)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
 
@@ -296,10 +290,16 @@ class ContinuousRuntime:
         are the members to split off for per-item twin re-issue (empty under
         whole-batch mode, where tripped members instead fold into ``slow``
         and the STRAGGLER cap handles the entire batch).  Stragglers hit
-        edge-phase work only, mirroring the sequential engine.  Counters are
-        per request so they match the sequential engine's exactly."""
+        the first (edge) segment of relay programs only, mirroring the
+        sequential engine.  Counters are per request so they match the
+        sequential engine's exactly."""
         per_item = straggler_mode(self.cfg) == "item"
-        if items[0].phase != EDGE or self.cfg.straggler_prob <= 0.0:
+        first = items[0]
+        is_relay_edge = (
+            first.seg_idx == 0
+            and self.arms[first.arm_idx].program.is_relay
+        )
+        if not is_relay_edge or self.cfg.straggler_prob <= 0.0:
             return 1.0, []
         kept_slow, reissue_rids, draws = partition_stragglers(
             self.cfg, [it.rid for it in items]
@@ -472,28 +472,31 @@ class ContinuousRuntime:
             if replica not in st.failed:
                 st.free.append(replica)
         for it in b.items:
-            if it.phase == EDGE:
-                fam = ARMS[it.arm_idx].family
+            prog = self.arms[it.arm_idx].program
+            if it.seg_idx < prog.n_segments - 1:
+                # hop: the latent ships to the next segment's pool
+                fam = self.arms[it.arm_idx].family
                 nbytes = self.transport.wire_bytes(fam)
                 tsec = self.transport.transfer_time(fam, it.req.rtt_ms)
                 self.telemetry.record_transfer(b.pool, nbytes)
                 if self.rt.trace:
                     tr = self.trace[it.rid]
-                    tr["edge_done"] = now
-                    tr["transfer_s"] = tsec
-                    tr["transfer_bytes"] = nbytes
+                    tr[f"{it.phase}_done"] = now
+                    tr["transfer_s"] = tr.get("transfer_s", 0.0) + tsec
+                    tr["transfer_bytes"] = (
+                        tr.get("transfer_bytes", 0) + nbytes
+                    )
                 self.evq.push(now + tsec, DEVICE_READY, it)
             else:
                 self._complete(it, now)
         self._dispatch(b.pool, now)
 
-    def _on_device_ready(self, edge_item: WorkItem, now: float) -> None:
-        pend = self.pending[edge_item.rid]
-        arm = ARMS[edge_item.arm_idx]
-        item = WorkItem(edge_item.req, edge_item.arm_idx, DEVICE,
-                        arm.device_pool, pend.device_steps)
+    def _on_segment_ready(self, prev_item: WorkItem, now: float) -> None:
+        """A hop's latent transfer landed: enqueue the next segment."""
+        item = self._item(prev_item.req, prev_item.arm_idx,
+                          prev_item.seg_idx + 1)
         if self.rt.trace:
-            self.trace[item.rid]["device_enqueue"] = now
+            self.trace[item.rid][f"{item.phase}_enqueue"] = now
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
 
@@ -501,15 +504,16 @@ class ContinuousRuntime:
         from repro.serving.engine import Record, score_and_update
 
         pend = self.pending.pop(item.rid)
-        arm = ARMS[pend.arm_idx]
+        arm = self.arms[pend.arm_idx]
         t_total = now - pend.req.arrival
         q = self.transport.quality_delta(
-            arm.family, self.qt[pend.req.rid, pend.arm_idx]
+            arm.family, self.qt[pend.req.rid, pend.arm_idx],
+            n_hops=arm.n_hops,
         )
         l_dev = max(pend.occ[pool_key(p)] for p in pools_used(arm))
         r_report = score_and_update(
             self.policy, pend.arm_idx, pend.ctx, q, t_total, l_dev,
-            dynamic_reward=self.dynamic_reward,
+            dynamic_reward=self.dynamic_reward, arms=self.arms,
         )
         if self.rt.trace:
             self.trace[item.rid]["done"] = now

@@ -42,17 +42,21 @@ DEVICE = "device"
 
 @dataclass
 class WorkItem:
-    """One phase of one request's relay execution, queued on a pool.
+    """One segment of one request's relay-program execution, queued on a
+    pool.
 
-    A relay request becomes two sequential WorkItems (edge then device);
-    a standalone request becomes a single device-phase item.
+    An N-segment program becomes N sequential WorkItems (edge, mid…,
+    device); a standalone request becomes a single device-phase item.
+    ``seg_idx`` is the position in the arm's program (``phase`` is its
+    human/trace name: "edge", "mid<k>", "device").
     """
 
     req: Request
     arm_idx: int
-    phase: str  # EDGE | DEVICE
+    phase: str  # EDGE | "mid<k>" | DEVICE
     pool: str
-    steps: int  # denoising steps of this phase (drives service time)
+    steps: int  # denoising steps of this segment (drives service time)
+    seg_idx: int = 0  # index into the arm program's segments
     enqueue_t: float = 0.0  # when it entered the aggregator queue
 
     @property

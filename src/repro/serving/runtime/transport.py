@@ -100,8 +100,8 @@ class HandoffTransport:
             self._fidelity[family] = err
         return self._fidelity[family]
 
-    def quality_delta(self, family: Optional[str], quality: Dict[str, float]
-                      ) -> Dict[str, float]:
+    def quality_delta(self, family: Optional[str], quality: Dict[str, float],
+                      n_hops: int = 1) -> Dict[str, float]:
         """Apply the measured compression quality delta to a quality dict.
 
         Similarity metrics (clip / ir) lose a *subtractive* penalty
@@ -109,10 +109,12 @@ class HandoffTransport:
         delta degrades quality regardless of the metric's sign (a
         multiplicative factor would shrink negative scores toward zero,
         i.e. reward compression on bad generations); target-free metrics
-        are untouched."""
+        are untouched.  An N-hop cascade pays the penalty once per
+        compressed hop (``n_hops``)."""
         if family is None or not self.cfg.compress:
             return quality
-        penalty = self.cfg.quality_sensitivity * self.handoff_error(family)
+        penalty = (self.cfg.quality_sensitivity * self.handoff_error(family)
+                   * max(n_hops, 1))
         out = dict(quality)
         for k in ("clip", "ir"):
             if k in out:

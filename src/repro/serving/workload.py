@@ -9,14 +9,18 @@ from repro.core.policies import Policy
 from repro.serving.arms import ARMS, N_ARMS
 
 
-def synthetic_quality_table(reqs) -> np.ndarray:
+def synthetic_quality_table(reqs, arms=None) -> np.ndarray:
     """(N, n_arms) object array of quality dicts with the ordering structure
-    the scheduler learns from: later relay steps slightly better, F3 arms
-    strong at text (cf. tests/test_serving.py)."""
-    qt = np.empty((len(reqs), N_ARMS), dtype=object)
+    the scheduler learns from: later relay steps slightly better (a cascade
+    arm's quality tracks its total large+mid step budget), F3 arms strong
+    at text (cf. tests/test_serving.py)."""
+    arms = arms if arms is not None else ARMS
+    qt = np.empty((len(reqs), len(arms)), dtype=object)
     for i, r in enumerate(reqs):
-        for a in ARMS:
-            base = 0.55 + 0.1 * (a.relay_step or 0) / 25.0
+        for a in arms:
+            # steps run above the smallest model scale (edge + mid segments)
+            big_steps = sum(s.steps for s in a.program.segments[:-1])
+            base = 0.55 + 0.1 * min(big_steps, 25) / 25.0
             ocr = (0.75 if a.family == "F3" else 0.08) if r.wants_text else 0.0
             qt[i, a.idx] = {"clip": base, "ir": base, "pick": 0.2 + 0.03 * base,
                             "aes": 5.0 + base, "ocr": ocr}
@@ -34,6 +38,6 @@ class CyclePolicy(Policy):
         self.i = 0
 
     def select(self, ctx, avail):
-        arm = self.i % N_ARMS
+        arm = self.i % len(avail)
         self.i += 1
         return arm

@@ -1,0 +1,77 @@
+"""End-to-end CI smoke for the relay-program IR path: the real entry
+points (quickstart example, runtime-throughput bench, cascade bench) run
+as subprocesses on tiny configurations, so the full CI gate exercises
+noise→segments→handoffs→metrics end to end and their timings land in the
+JUnit artifact (scripts/ci.sh writes this file's results to e2e.xml).
+
+All tests are @slow: the fast gate skips them, the full gate runs them as
+an explicit stage.  The 120-step "fast" family checkpoints are cached in
+results/ckpts_fast across tests and runs (quickstart trains the pairs,
+bench_cascade adds the mid stages).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+
+pytestmark = pytest.mark.slow
+
+
+def _run(args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, *args], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=ROOT,
+    )
+    assert r.returncode == 0, (
+        f"{' '.join(map(str, args))}\nSTDOUT:\n{r.stdout[-2000:]}\n"
+        f"STDERR:\n{r.stderr[-3000:]}"
+    )
+    return r.stdout
+
+
+def test_quickstart_fast_compressed():
+    """quickstart --fast trains tiny families and runs the two-segment
+    relay program with a compressed handoff — the int8 wire deviation and
+    transfer-bytes accounting must surface in its report."""
+    out = _run([ROOT / "examples" / "quickstart.py", "--fast", "--compress"])
+    assert "sigma matching (Eq. 4)" in out
+    assert "relay transferred" in out
+    assert "int8 handoff deviation" in out
+
+
+def test_bench_runtime_throughput_quick():
+    """The discrete-event runtime bench on its quick config: identical arm
+    decisions across runtimes, compressed wire ledger, straggler modes."""
+    _run(["-c",
+          "from benchmarks import bench_runtime_throughput as b; "
+          "b.run(quick=True)"])
+    data = json.loads(
+        (RESULTS / "bench_runtime_throughput_quick.json").read_text()
+    )
+    assert "straggler_heavy" in data and data["straggler_heavy"]["p95_win"] > 1.0
+
+
+def test_bench_cascade_fast_quick():
+    """The 3-hop cascade sweep on the fast-trained families: programs
+    execute end to end and the shape-keyed compile cache dedups (strictly
+    fewer compiled pipelines than arms)."""
+    out = _run([ROOT / "benchmarks" / "bench_cascade.py", "--fast", "--quick"])
+    assert "cascade_summary" in out
+    data = json.loads((RESULTS / "bench_cascade_quick.json").read_text())
+    stats = data["compile_cache"]
+    n_arms = 11 + 6  # legacy space + DEFAULT_CASCADES
+    assert stats["pipelines_compiled"] < n_arms
+    assert stats["pipeline_requests"] >= n_arms
+    for fam in ("XL", "F3"):
+        assert data[fam]["frontier"], "no cascade verdicts recorded"
+        three_hop = [p for p in data[fam]["points"] if p["n_segments"] == 3]
+        assert three_hop and all(len(p["segment_s"]) == 3 for p in three_hop)

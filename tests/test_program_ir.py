@@ -1,0 +1,380 @@
+"""Golden suite for the segmented relay-program IR: every legacy 11-arm
+configuration, re-expressed as a :class:`RelayProgram`, must be
+indistinguishable from its pre-IR encoding —
+
+* program structure reproduces the Eq. 4 plan (s, s', sigmas, pools);
+* generated latents are **bit-identical** to a direct legacy-style
+  execution (scan-based samplers, one fused jit per arm) even though the
+  executor now runs fori_loop segments with *traced* bounds through the
+  shape-keyed compile cache;
+* ``transfer_bytes`` / latency breakdowns match the legacy two-pool
+  arithmetic exactly;
+* LinUCB arm decisions on a fig6-style workload are identical whether the
+  action space comes from the dynamic builder or a hand-rolled legacy
+  table.
+
+Plus the properties the refactor exists for: the compile cache dedups
+(strictly fewer compiled pipelines than arms), and 3-hop cascade programs
+execute end-to-end with per-hop sigma matching.
+"""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import samplers
+from repro.core.program import (Handoff, RelayProgram, RelaySegment,
+                                make_program, phase_name)
+from repro.core.relay import execute_program, make_relay_plan, relay_generate
+from repro.diffusion.families import SPECS
+from repro.serving import latency as lat
+from repro.serving.arms import (ARMS, N_ARMS, RELAY_STEPS, Arm,
+                                build_action_space, cascade_action_space,
+                                cascade_program, pools_used, relay_program,
+                                standalone_program)
+from repro.serving.executor import Executor
+
+
+# ---------------------------------------------------------------------------
+# toy families: real jit/bucketing/seeding machinery, no training
+# ---------------------------------------------------------------------------
+
+
+def _toy_fn(params, x, t, cond):
+    return 0.5 * x + 0.05 * jnp.tanh(x)
+
+
+def _toy_mid_fn(params, x, t, cond):
+    return 0.45 * x + 0.05 * jnp.tanh(x)
+
+
+def _toy_families(with_mid=False):
+    fams = {}
+    for name in ("XL", "F3"):
+        fams[name] = SimpleNamespace(
+            spec=SPECS[name](), large_fn=_toy_fn, small_fn=_toy_fn,
+            large_params=None, small_params=None,
+            mid_fn=_toy_mid_fn if with_mid else None,
+            mid_params=None,
+        )
+    return fams
+
+
+@pytest.fixture(scope="module")
+def toy_executor():
+    return Executor(_toy_families())
+
+
+# ---------------------------------------------------------------------------
+# 1. structure: legacy arm → program encoding
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_arms_encode_as_programs():
+    """The dynamic builder's default instantiation IS the Table II space:
+    idx/labels/pools unchanged, and each relay program's first hop equals
+    the Eq. 4 plan the legacy code computed."""
+    assert N_ARMS == 11
+    assert ARMS[0].label == "vega-standalone"
+    assert ARMS[0].family is None and ARMS[0].relay_step is None
+    assert ARMS[0].program.n_segments == 1
+    assert phase_name(ARMS[0].program, 0) == "device"
+    for arm in ARMS[1:]:
+        prog = arm.program
+        assert prog.n_segments == 2 and prog.n_hops == 1
+        plan = make_relay_plan(SPECS[prog.family](), arm.relay_step)
+        assert arm.plan == plan
+        assert prog.segments[0].stop == plan.s
+        assert prog.segments[1].start == plan.s_prime
+        assert prog.handoffs[0].sigma_out == plan.sigma_handoff
+        assert prog.handoffs[0].sigma_in == plan.sigma_resume
+        assert phase_name(prog, 0) == "edge" and phase_name(prog, 1) == "device"
+    # pools: standalone holds one pool, relays hold (edge, device)
+    assert pools_used(ARMS[0]) == ("vega",)
+    assert pools_used(ARMS[3]) == ("sdxl", "vega")
+    assert pools_used(ARMS[8]) == ("sd3l", "sd3m")
+
+
+def test_program_validation():
+    spec = SPECS["XL"]()
+    with pytest.raises(ValueError, match="steps=None"):
+        make_program(spec, [("large", "sdxl", 5), ("small", "vega", 10)])
+    with pytest.raises(ValueError, match="explicit steps"):
+        make_program(spec, [("large", "sdxl", None), ("small", "vega", None)])
+    with pytest.raises(ValueError, match="handoffs"):
+        RelayProgram("XL", (RelaySegment("large", "sdxl", 0, 5),), (Handoff(1.0, 1.0),))
+    with pytest.raises(ValueError, match="at least one segment"):
+        RelayProgram("XL", (), ())
+
+
+def test_cascade_program_sigma_matching_per_hop():
+    """Each hop of a 3-hop L→M→S program is an independent Eq. 4 argmin on
+    the downstream ladder."""
+    from repro.core.schedules import sigma_match
+
+    spec = SPECS["XL"]()
+    prog = cascade_program("XL", 10, 10)
+    l, m, s = prog.segments
+    assert (l.model, m.model, s.model) == ("large", "mid", "small")
+    assert pools_used(Arm(0, prog, "x")) == ("sdxl", "ssd1b", "vega")
+    assert m.start == sigma_match(spec.sigmas_edge, l.stop, spec.sigmas_mid)
+    assert s.start == sigma_match(spec.sigmas_mid, m.stop, spec.sigmas_device)
+    # noise continuity: monotone decreasing sigmas across the whole program
+    sig_path = [float(spec.sigmas_edge[0])]
+    for h in prog.handoffs:
+        sig_path += [h.sigma_out, h.sigma_in]
+    assert all(b <= a * 1.05 for a, b in zip(sig_path, sig_path[1:]))
+
+
+# ---------------------------------------------------------------------------
+# 2. bit-identical latents: shape-cached executor vs legacy-style execution
+# ---------------------------------------------------------------------------
+
+
+def _legacy_generate(families, arm, seeds):
+    """The pre-IR executor path: per-arm fused jit, scan-based samplers,
+    single-key batched noise — byte-for-byte what the old code ran."""
+    from repro.diffusion import synth
+
+    fam = families[arm.program.family]
+    family = arm.family or "XL"
+    _, _, cond = synth.batch(seeds, family)
+    cond = jnp.asarray(cond)
+
+    if arm.family is None:
+        def fn(rng, cond):
+            x = jax.random.normal(rng, (cond.shape[0],) + fam.spec.latent_shape)
+            out, _ = samplers.ddim_sample(
+                fam.small_fn, fam.small_params, x, fam.spec.sigmas_device, cond
+            )
+            return out
+    else:
+        plan = make_relay_plan(fam.spec, arm.relay_step)
+
+        def fn(rng, cond):
+            x = jax.random.normal(rng, (cond.shape[0],) + fam.spec.latent_shape)
+            out, _ = relay_generate(
+                fam.spec, plan, fam.large_fn, fam.large_params,
+                fam.small_fn, fam.small_params, x, cond, cond,
+            )
+            return out
+
+    key = jax.random.PRNGKey(int(seeds[0]) * 7919 + arm.idx)
+    return np.asarray(jax.jit(fn)(key, cond))
+
+
+def test_latents_bit_identical_to_legacy_execution(toy_executor):
+    """Golden lock: for every legacy arm the shape-cached traced-bounds
+    pipeline reproduces the legacy fused-jit scan execution bit-for-bit."""
+    seeds = np.arange(5) + 1000
+    fams = _toy_families()
+    for arm in ARMS:
+        new = toy_executor.generate(arm, seeds)
+        old = _legacy_generate(fams, arm, seeds)
+        np.testing.assert_array_equal(new, old, err_msg=arm.label)
+
+
+def test_capture_traj_paths_bit_identical():
+    """The scan (capture_traj=True) and fori (False) sampler backends agree
+    bit-for-bit, and the hot path returns no trajectory stack."""
+    spec = SPECS["XL"]()
+    x = jax.random.normal(jax.random.PRNGKey(0), (3,) + spec.latent_shape)
+    plan = make_relay_plan(spec, 15)
+    with_traj, info_t = relay_generate(
+        spec, plan, _toy_fn, None, _toy_fn, None, x, None, None,
+        capture_traj=True,
+    )
+    no_traj, info_n = relay_generate(
+        spec, plan, _toy_fn, None, _toy_fn, None, x, None, None,
+        capture_traj=False,
+    )
+    np.testing.assert_array_equal(np.asarray(with_traj), np.asarray(no_traj))
+    assert info_t["traj_edge"] is not None and info_t["traj_device"] is not None
+    assert info_n["traj_edge"] is None and info_n["traj_device"] is None
+    assert info_t["transfer_bytes"] == info_n["transfer_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# 3. compile cache: strictly fewer pipelines than arms
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_dedups_default_action_space():
+    ex = Executor(_toy_families())
+    seeds = np.arange(3) + 50
+    for arm in ARMS:
+        ex.generate(arm, seeds)
+    stats = ex.cache_stats()
+    # the 11 legacy arms collapse to 3 shapes: vega standalone, XL relay
+    # (any s), F3 relay (any s)
+    assert stats["pipelines_compiled"] == 3
+    assert stats["pipelines_compiled"] < N_ARMS
+    assert stats["pipeline_requests"] == N_ARMS
+    assert stats["cache_hit_rate"] == pytest.approx(1 - 3 / 11)
+    # per-(family, role) segment programs: XL large+small, F3 large+small
+    assert stats["segment_fns_compiled"] == 4
+
+
+def test_shape_key_separates_incompatible_programs():
+    p1 = relay_program("XL", 5)
+    p2 = relay_program("XL", 25)
+    p3 = relay_program("F3", 5)
+    p4 = cascade_program("XL", 5, 10)
+    assert p1.shape_key() == p2.shape_key()  # same shape, different bounds
+    assert p1.shape_key() != p3.shape_key()  # different family
+    assert p1.shape_key() != p4.shape_key()  # different segment count
+
+
+# ---------------------------------------------------------------------------
+# 4. latency / wire bytes: program derivation equals legacy arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_program_latency_matches_legacy_arithmetic():
+    for arm in ARMS:
+        for compressed in (False, True):
+            lb = lat.arm_latency(arm, arm.plan, 80.0, compressed=compressed)
+            if arm.family is None:
+                assert lb.edge_s == 0.0 and lb.transfer_s == 0.0
+                assert lb.device_s == pytest.approx(
+                    lat.STEP_COST["vega"] * lat.T_FULL["vega"]
+                )
+            else:
+                plan = arm.plan
+                assert lb.edge_s == pytest.approx(
+                    lat.STEP_COST[arm.edge_pool] * plan.s
+                )
+                assert lb.device_s == pytest.approx(
+                    lat.STEP_COST[arm.device_pool]
+                    * (lat.T_FULL[arm.device_pool] - plan.s_prime)
+                )
+                assert lb.transfer_s == pytest.approx(
+                    lat.transfer_time(arm.family, 80.0, compressed=compressed)
+                )
+                assert lat.program_wire_bytes(
+                    arm.program, compressed=compressed
+                ) == lat.latent_wire_bytes(arm.family, compressed=compressed)
+            assert lb.total == pytest.approx(
+                lb.edge_s + lb.device_s + lb.transfer_s
+            )
+        assert lat.arm_vram(arm) == max(
+            lat.VRAM_GB[p] for p in pools_used(arm)
+        )
+
+
+def test_cascade_latency_per_segment():
+    prog = cascade_program("XL", 10, 10)
+    lb = lat.program_latency(prog, 80.0)
+    assert len(lb.segment_s) == 3 and len(lb.hop_s) == 2
+    l, m, s = prog.segments
+    assert lb.segment_s[0] == pytest.approx(lat.STEP_COST["sdxl"] * l.steps)
+    assert lb.segment_s[1] == pytest.approx(lat.STEP_COST["ssd1b"] * m.steps)
+    assert lb.segment_s[2] == pytest.approx(lat.STEP_COST["vega"] * s.steps)
+    # two hops, each priced at the latent wire size
+    assert lb.transfer_s == pytest.approx(
+        2 * lat.transfer_time("XL", 80.0)
+    )
+    # independent jitter draws per segment
+    rng = np.random.default_rng(0)
+    lbj = lat.program_latency(prog, 80.0, rng=rng)
+    js = [a / b for a, b in zip(lbj.segment_s, lb.segment_s)]
+    assert len(set(round(j, 9) for j in js)) == 3  # three distinct draws
+
+
+# ---------------------------------------------------------------------------
+# 5. scheduler decisions: builder output ≡ hand-rolled legacy table
+# ---------------------------------------------------------------------------
+
+
+def _handrolled_legacy_arms():
+    """The Table II space written out longhand (no builder) — programs
+    assembled field by field, the way the legacy tuples were."""
+    arms = [Arm(0, standalone_program("XL", "small"), "vega-standalone")]
+    for i, s in enumerate(RELAY_STEPS):
+        arms.append(Arm(1 + i, relay_program("XL", s), f"sdxl+vega@s={s}"))
+    for i, s in enumerate(RELAY_STEPS):
+        arms.append(Arm(6 + i, relay_program("F3", s), f"sd35L+M@s={s}"))
+    return tuple(arms)
+
+
+def test_builder_reproduces_handrolled_space():
+    assert build_action_space() == _handrolled_legacy_arms()
+
+
+@pytest.mark.parametrize("runtime", ["sequential", "continuous"])
+def test_linucb_decisions_identical_on_fig6_workload(runtime):
+    """fig6-style workload: a seeded LinUCB scheduler replays the same
+    request stream over the builder-emitted space and the hand-rolled
+    legacy table — arm decisions, rewards and quality must match exactly
+    (the IR encoding is invisible to the scheduler)."""
+    from repro.core.policies import RisePolicy
+    from repro.serving.engine import ServingEngine, SimConfig, make_requests
+    from repro.serving.workload import synthetic_quality_table
+
+    cfg = SimConfig(n_requests=80, mean_interarrival=2.0, seed=10)
+    reqs = make_requests(cfg, seed0=50_000)
+    runs = {}
+    for name, arms in (("builder", build_action_space()),
+                       ("handrolled", _handrolled_legacy_arms())):
+        qt = synthetic_quality_table(reqs, arms=arms)
+        eng = ServingEngine(RisePolicy(seed=0, arms=arms), qt, cfg,
+                            runtime=runtime, arms=arms)
+        recs = eng.run(reqs)
+        runs[name] = {r.rid: r for r in recs}
+    a, b = runs["builder"], runs["handrolled"]
+    assert sorted(a) == sorted(b)
+    for rid in a:
+        assert a[rid].arm == b[rid].arm
+        assert a[rid].reward == b[rid].reward
+        assert a[rid].quality == b[rid].quality
+        assert a[rid].t_total == b[rid].t_total
+
+
+# ---------------------------------------------------------------------------
+# 6. cascades execute end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_executes_and_batches():
+    """A 3-hop program runs through the executor (three segments, two
+    sigma-matched hops) and through generate_bucketed with subset re-runs
+    staying bit-identical — the straggler re-issue contract holds for
+    cascades too."""
+    ex = Executor(_toy_families(with_mid=True), arms=cascade_action_space())
+    arm = next(a for a in ex.arms if a.program.n_segments == 3)
+    seeds = np.arange(5) + 7
+    out = ex.generate_bucketed(arm, seeds)
+    assert out.shape == (5,) + SPECS[arm.program.family]().latent_shape
+    part = ex.generate_bucketed(arm, seeds, subset=[1, 3])
+    np.testing.assert_array_equal(part, out[[1, 3]])
+
+
+def test_cascade_execute_program_accounts_hops():
+    spec = SPECS["XL"]()
+    prog = make_program(
+        spec,
+        [("large", None, 10), ("mid", None, 10), ("small", None, None)],
+        compress=True,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(2), (2,) + spec.latent_shape)
+    models = {"large": (_toy_fn, None), "mid": (_toy_mid_fn, None),
+              "small": (_toy_fn, None)}
+    out, info = execute_program(spec, prog, models, x, None)
+    assert out.shape == x.shape
+    assert len(info["hops"]) == 2
+    assert info["phases"] == ["edge", "mid1", "device"]
+    for hop in info["hops"]:
+        assert 0.0 < float(hop["deviation_pct"]) < 2.0
+        assert hop["transfer_bytes"] < x.size * 4 // 3  # int8 + scales
+    assert info["transfer_bytes"] == sum(
+        h["transfer_bytes"] for h in info["hops"]
+    )
+    # uncompressed: raw fp32 bytes per hop
+    prog_raw = make_program(
+        spec, [("large", None, 10), ("mid", None, 10), ("small", None, None)]
+    )
+    _, info_raw = execute_program(spec, prog_raw, models, x, None)
+    assert info_raw["transfer_bytes"] == 2 * x.size * 4
+    assert float(info_raw["handoff_deviation_pct"]) == 0.0

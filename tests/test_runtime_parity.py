@@ -93,6 +93,69 @@ def test_runtime_parity(regime, compress, mode):
         assert fc.replica_failures == fc.replica_recoveries == 0
 
 
+def test_sequential_prices_compressed_handoff():
+    """Satellite bugfix lock: the sequential engine's hop pricing honors the
+    transport's compression flag instead of always billing the raw fp16
+    latent.  With identical seeds the jitter draws cancel, so the per-
+    request latency difference between a compressed and an uncompressed
+    sequential run is *exactly* the wire-time delta of the arm's hops (and
+    zero for standalone arms)."""
+    from repro.serving import latency as lat
+
+    cfg = SimConfig(n_requests=24, mean_interarrival=500.0, seed=3)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    runs = {}
+    for compress in (False, True):
+        eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="sequential",
+                            runtime_cfg=RuntimeConfig(compress_handoff=compress))
+        runs[compress] = {r.rid: r for r in eng.run(reqs)}
+    for rid, r_raw in runs[False].items():
+        r_c = runs[True][rid]
+        assert r_c.arm == r_raw.arm
+        arm = ARMS[r_c.arm]
+        delta = arm.n_hops * (
+            lat.transfer_time(arm.family, reqs[rid].rtt_ms, compressed=False)
+            - lat.transfer_time(arm.family, reqs[rid].rtt_ms, compressed=True)
+        )
+        assert r_raw.t_total - r_c.t_total == pytest.approx(delta), arm.label
+        if arm.family is None:
+            assert delta == 0.0
+        else:
+            assert delta > 0.0
+        # the quality delta applies identically too (same transport model)
+        transport = HandoffTransport(TransportConfig(compress=True))
+        assert r_c.quality == pytest.approx(
+            transport.quality_delta(arm.family, qt[rid, r_c.arm])
+        )
+        assert r_raw.quality == qt[rid, r_raw.arm]
+
+
+@pytest.mark.parametrize("compress", [True, False], ids=["int8", "raw"])
+def test_latency_model_parity_under_compression(compress):
+    """Both runtimes configured with the *same* transport agree on every
+    scheduler-visible quantity — including per-request wall latency — on a
+    sparse workload (no queueing, linger disabled): the only latency
+    inputs left are the shared per-segment service model, the shared
+    jitter stream and the shared hop pricing."""
+    cfg = SimConfig(n_requests=33, mean_interarrival=1000.0, seed=5)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    runs = {}
+    for runtime in ("sequential", "continuous"):
+        rt_cfg = RuntimeConfig(compress_handoff=compress, linger_s=0.0)
+        eng = ServingEngine(CyclePolicy(), qt, cfg, runtime=runtime,
+                            runtime_cfg=rt_cfg)
+        runs[runtime] = {r.rid: r for r in eng.run(reqs)}
+    seq, cont = runs["sequential"], runs["continuous"]
+    assert sorted(seq) == sorted(cont)
+    for rid in seq:
+        assert seq[rid].arm == cont[rid].arm
+        assert seq[rid].t_total == pytest.approx(cont[rid].t_total)
+        assert seq[rid].quality == pytest.approx(cont[rid].quality)
+        assert seq[rid].reward == pytest.approx(cont[rid].reward)
+
+
 def test_continuous_is_default_runtime():
     eng = ServingEngine(CyclePolicy(), None, SimConfig())
     assert eng.runtime == "continuous"

@@ -120,8 +120,12 @@ def _continuous_pools(cfg, busy, horizon=10.0):
     return rt
 
 
+N_REPLICAS = sum(POOL_REPLICAS.values())
+
+
 @settings(max_examples=40, deadline=None)
-@given(busy_bits=st.lists(st.booleans(), min_size=8, max_size=8))
+@given(busy_bits=st.lists(st.booleans(), min_size=N_REPLICAS,
+                          max_size=N_REPLICAS))
 def test_occupancy_features_identical_across_runtimes(busy_bits):
     """For any pool busy pattern, the sequential engine and the continuous
     runtime compute the same context load features — both delegate to

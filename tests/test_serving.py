@@ -130,20 +130,19 @@ def test_ablation_variants_construct():
         assert np.isfinite(s["total_reward"])
 
 
-def test_serve_no_compress_sequential_warns():
-    """--no-compress is inert without the continuous runtime's handoff
-    transport; the launcher must say so instead of silently ignoring it."""
+def test_serve_no_compress_resolves_for_both_runtimes():
+    """Since the sequential engine prices hops through the shared
+    HandoffTransport, --no-compress configures either runtime (it used to
+    be inert with the sequential fallback — the latency-model parity tests
+    in tests/test_runtime_parity.py lock the fixed behavior)."""
     import warnings
 
     from repro.launch.serve import resolve_runtime_config
 
-    with pytest.warns(UserWarning, match="no effect with the sequential"):
-        assert resolve_runtime_config("sequential", no_compress=True) is None
-
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # none of these may warn
-        assert resolve_runtime_config("sequential", no_compress=False) is None
-        rc = resolve_runtime_config("continuous", no_compress=True)
-        assert rc.compress_handoff is False
-        rc = resolve_runtime_config("continuous", no_compress=False)
-        assert rc.compress_handoff is True
+        for runtime in ("sequential", "continuous"):
+            rc = resolve_runtime_config(runtime, no_compress=True)
+            assert rc.compress_handoff is False
+            rc = resolve_runtime_config(runtime, no_compress=False)
+            assert rc.compress_handoff is True
