@@ -18,7 +18,11 @@ than arms.
   PYTHONPATH=src:. python benchmarks/bench_cascade.py [--quick] [--fast]
 
 ``--fast`` trains tiny 120-step families (including the mid stages) into
-``results/ckpts_fast`` — the CI smoke configuration.
+``results/ckpts_fast`` — the CI smoke configuration.  ``--trace-out PATH``
+additionally writes a Chrome trace-event JSON of a pure-scheduling replay
+over the cascade action space (no model execution): each L→M→S program
+shows up as edge/mid1/device segment spans chained by hop spans, viewable
+in Perfetto.
 """
 from __future__ import annotations
 
@@ -73,6 +77,38 @@ def _frontier(points_2hop, cascade):
         "bracket": (lo["label"] if lo else None, hi["label"] if hi else None),
         "between_bracket_quality": between,
     }
+
+
+def run_traced(trace_out: str, n: int = 80) -> dict:
+    """Pure-scheduling cascade trace: replay a Poisson stream over the
+    3-hop action space on the continuous runtime (synthetic qualities, no
+    model execution) and export the relay spans as Chrome trace-event
+    JSON.  Cheap — this never touches the trained families."""
+    from repro.serving.arms import cascade_action_space
+    from repro.serving.engine import ServingEngine, SimConfig, make_requests
+    from repro.serving.obs.export import (to_chrome_trace,
+                                          validate_chrome_trace,
+                                          write_chrome_trace)
+    from repro.serving.runtime import RuntimeConfig
+    from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+    space = cascade_action_space()
+    cfg = SimConfig(n_requests=n, mean_interarrival=2.0, seed=5)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs, arms=space)
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                        runtime_cfg=RuntimeConfig(), arms=space)
+    eng.run(reqs)
+    meta = {"benchmark": "cascade", "n_arms": len(space)}
+    errors = validate_chrome_trace(to_chrome_trace(eng.tracer, meta=meta))
+    assert not errors, f"cascade trace schema errors: {errors[:3]}"
+    write_chrome_trace(eng.tracer, trace_out, meta=meta)
+    n_hops = sum(1 for s in eng.tracer.spans() if s.kind == "hop")
+    emit("cascade_trace", 0.0,
+         f"requests={n};coverage={eng.tracer.coverage():.3f};"
+         f"hop_spans={n_hops};out={trace_out}")
+    return {"coverage": eng.tracer.coverage(), "hop_spans": n_hops,
+            "trace_out": trace_out}
 
 
 def run(quick: bool = False, fast: bool = False, families=("XL", "F3")):
@@ -158,4 +194,6 @@ def run(quick: bool = False, fast: bool = False, families=("XL", "F3")):
 
 
 if __name__ == "__main__":
+    if "--trace-out" in sys.argv:
+        run_traced(sys.argv[sys.argv.index("--trace-out") + 1])
     run(quick="--quick" in sys.argv, fast="--fast" in sys.argv)

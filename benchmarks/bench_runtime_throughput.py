@@ -25,7 +25,10 @@ import numpy as np
 from benchmarks.common import emit, save_json
 from repro.serving.engine import (ServingEngine, SimConfig, make_requests,
                                   summarize)
-from repro.serving.metrics import export_runtime_telemetry
+from repro.serving.obs.export import (export_runtime_telemetry,
+                                      to_chrome_trace, validate_chrome_trace,
+                                      write_chrome_trace)
+from repro.serving.obs.stats import attribution_residual
 from repro.serving.runtime import RuntimeConfig
 from repro.serving.workload import CyclePolicy, synthetic_quality_table
 
@@ -53,6 +56,63 @@ def run_one(reqs, qt, cfg, runtime, rt_cfg=None):
         "fault_counters": eng.fault_counters.as_dict(),
         "arms": [r.arm for r in sorted(recs, key=lambda r: r.rid)],
     }
+
+
+def run_traced(trace_out: str, quick: bool = False) -> dict:
+    """Traced degraded-edge run + the observability acceptance gate.
+
+    Replays the faulty heavy-traffic regime on the continuous runtime twice
+    — tracing on and tracing off — and asserts that observability is free:
+    bit-identical arm decisions, quality metrics and fault counters.  The
+    traced run must then cover ≥ 99 % of completed requests with spans
+    whose per-segment attribution sums to the engine's ``t_total`` within
+    1e-6, and export as schema-valid Chrome trace-event JSON."""
+    n = 150 if quick else N_REQUESTS
+    cfg = SimConfig(
+        n_requests=n, mean_interarrival=1.0, seed=3,
+        fail_replica=("sdxl", 0, 60.0, 400.0),
+        straggler_prob=0.25, straggler_factor=6.0,
+    )
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    runs = {}
+    for traced in (True, False):
+        eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                            runtime_cfg=RuntimeConfig(trace=traced))
+        recs = sorted(eng.run(reqs), key=lambda r: r.rid)
+        runs[traced] = (eng, recs)
+    (eng_on, on), (eng_off, off) = runs[True], runs[False]
+    assert [r.arm for r in on] == [r.arm for r in off], \
+        "tracing perturbed arm decisions"
+    assert [r.quality for r in on] == [r.quality for r in off], \
+        "tracing perturbed quality metrics"
+    assert [r.reward for r in on] == [r.reward for r in off], \
+        "tracing perturbed rewards"
+    assert eng_on.fault_counters.as_dict() == eng_off.fault_counters.as_dict(), \
+        "tracing perturbed fault counters"
+
+    tracer = eng_on.tracer
+    coverage = tracer.coverage()
+    assert coverage >= 0.99, f"span coverage {coverage:.3f} < 0.99"
+    residual = attribution_residual(tracer)
+    assert residual < 1e-6, f"attribution residual {residual:.2e} >= 1e-6"
+    trace = to_chrome_trace(tracer, meta={"benchmark": "runtime_throughput",
+                                          "n_requests": n})
+    errors = validate_chrome_trace(trace)
+    assert not errors, f"chrome trace schema errors: {errors[:3]}"
+    if trace_out:
+        write_chrome_trace(tracer, trace_out,
+                           meta={"benchmark": "runtime_throughput",
+                                 "n_requests": n})
+    emit(
+        "runtime_trace_acceptance", 0.0,
+        f"coverage={coverage:.3f};residual={residual:.2e};"
+        f"events={len(trace['traceEvents'])};bit_identical=yes;"
+        f"out={trace_out or '-'}",
+    )
+    return {"coverage": coverage, "attribution_residual": residual,
+            "n_trace_events": len(trace["traceEvents"]),
+            "trace_out": trace_out}
 
 
 def run(quick: bool = False):
@@ -179,5 +239,21 @@ def run(quick: bool = False):
     return out
 
 
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (150 requests, separate JSON)")
+    ap.add_argument("--trace-out", default="",
+                    help="also run the traced acceptance regime and write "
+                         "its Chrome trace-event JSON here")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    if args.trace_out:
+        out["trace_acceptance"] = run_traced(args.trace_out, quick=args.quick)
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    main()

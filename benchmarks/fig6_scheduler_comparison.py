@@ -18,6 +18,7 @@ from repro.serving.arms import ARMS, N_ARMS
 from repro.serving.engine import (ServingEngine, SimConfig, _static_plan,
                                   make_requests, summarize)
 from repro.serving.executor import Executor
+from repro.serving.obs.sched import scheduler_report
 
 
 def offline_train_data(reqs, qt, seed=0):
@@ -91,6 +92,9 @@ def run(quick: bool = False):
         recs = eng.run(test_reqs_byid)
         dt = time.perf_counter() - t0
         s = summarize(recs)
+        # per-policy scheduler introspection: arm pulls / reward means /
+        # hindsight cumulative regret, plus (RISE) the LinUCB state snapshot
+        s["introspection"] = scheduler_report(policy, recs, ARMS)
         out[name] = s
         emit(
             f"fig6_scheduler_{name}",
@@ -109,6 +113,11 @@ def run(quick: bool = False):
     )
     emit("fig6_rise_vs_best_baseline", 0.0,
          f"best_baseline={best_baseline};relative_gain={gain*100:.1f}%;paper=15.74%")
+    ri = out["RISE"]["introspection"]
+    emit("fig6_rise_introspection", 0.0,
+         f"best_arm={ri['best_arm']};"
+         f"cumulative_regret={ri['cumulative_regret']:.3f};"
+         f"max_conf_width={max(ri['linucb']['confidence_width_at_ctx']):.4f}")
     out["_meta"] = {"best_baseline": best_baseline, "relative_gain": gain}
     save_json("fig6_scheduler_comparison", out)
     return out

@@ -1,0 +1,75 @@
+"""Event-loop profile of the continuous-batching runtime under heavy
+traffic: where does the simulator's wall-clock go, and how hard is the
+event heap working?
+
+This is the measured baseline for the ROADMAP's fleet-scale item
+(vectorizing the event loop for 10⁶-request replays): per-event-type
+handler wall time, events/s, heap push/pop counts and peak size, from a
+heavy mixed workload (μ = 1.5 s, the fig6 congested regime) with
+stragglers and a replica outage so every handler type is exercised.
+
+The profiler is wall-clock only — it never touches the simulated clock or
+any RNG stream, so the profiled run's records are bit-identical to an
+unprofiled one (asserted below).
+
+  PYTHONPATH=src:. python benchmarks/profile_event_loop.py [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, save_json
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.obs.profiler import EventLoopProfiler
+from repro.serving.runtime import RuntimeConfig
+from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+N_REQUESTS = 2000
+HEAVY_MU = 1.5  # fig6's congested arrival regime
+
+
+def run(quick: bool = False) -> dict:
+    n = 300 if quick else N_REQUESTS
+    cfg = SimConfig(
+        n_requests=n, mean_interarrival=HEAVY_MU, seed=7,
+        straggler_prob=0.2, straggler_factor=6.0,
+        fail_replica=("sdxl", 0, 100.0, 900.0),
+    )
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+
+    prof = EventLoopProfiler()
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                        runtime_cfg=RuntimeConfig(profiler=prof))
+    recs = sorted(eng.run(reqs), key=lambda r: r.rid)
+
+    # the profiler must be free: bit-identical records without it
+    eng0 = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                         runtime_cfg=RuntimeConfig())
+    recs0 = sorted(eng0.run(reqs), key=lambda r: r.rid)
+    assert [r.arm for r in recs] == [r.arm for r in recs0]
+    assert [r.t_total for r in recs] == [r.t_total for r in recs0]
+
+    report = prof.report()
+    report["workload"] = {
+        "n_requests": n, "mean_interarrival": HEAVY_MU,
+        "straggler_prob": cfg.straggler_prob,
+        "fail_replica": list(cfg.fail_replica),
+    }
+    top = max(report["per_event_type"].items(), key=lambda kv: kv[1]["wall_s"])
+    emit(
+        "event_loop_profile",
+        1e6 * report["loop_wall_s"] / max(report["events"], 1),
+        f"events={report['events']};"
+        f"events_per_s={report['events_per_s']:.0f};"
+        f"top={top[0]}:{top[1]['share']:.0%};"
+        f"heap_pushes={report['heap_ops'].get('pushes', 0)};"
+        f"heap_peak={report['heap_ops'].get('peak_size', 0)}",
+    )
+    save_json("obs_event_loop_profile_quick" if quick
+              else "obs_event_loop_profile", report)
+    return report
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

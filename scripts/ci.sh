@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI gate: runtime parity + fast smoke first (hard gates), then — in full
 # mode — the e2e IR-path smoke (quickstart + tiny runtime/cascade bench
-# configs), the distributed-correctness suites and the full tier-1 suite.
+# configs), the distributed-correctness suites, a traced observability
+# sweep (Chrome trace emission + schema validation) and the full tier-1
+# suite.
 #
 #   scripts/ci.sh          # parity + fast smoke + e2e + full tier-1
 #   scripts/ci.sh fast     # parity + fast smoke only (~3 min)
@@ -52,6 +54,17 @@ if [ "${1:-full}" = "full" ]; then
     python -m pytest -q --durations=0 \
         --junitxml "$JUNIT_DIR/distribution.xml" \
         tests/test_distribution.py tests/test_distribution_parity.py
+
+    echo "== traced sweep (observability gate: span trace emission + schema) =="
+    # small traced throughput run: asserts trace-on vs trace-off
+    # bit-identity, >=99% span coverage and attribution-sums-to-t_total
+    # (inside the benchmark), then schema-validates the emitted Chrome
+    # trace with the standalone validator.  The trace lands next to the
+    # JUnit XML so ci.yml uploads it — open it in Perfetto to inspect the
+    # relay flows of the exact CI run.
+    PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_runtime_throughput.py \
+        --quick --trace-out "$JUNIT_DIR/trace.json"
+    python -m repro.serving.obs.export "$JUNIT_DIR/trace.json"
 
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
     out="$(mktemp)"

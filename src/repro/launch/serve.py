@@ -13,17 +13,23 @@ import json
 import numpy as np
 
 
-def resolve_runtime_config(runtime: str, no_compress: bool):
+def resolve_runtime_config(runtime: str, no_compress: bool, profile: bool = False):
     """RuntimeConfig for the chosen runtime.
 
     Both runtimes consume the transport knobs: the sequential engine
     prices inter-segment hops (and applies the measured quality delta)
     through the same :class:`HandoffTransport` the continuous runtime
     uses, so ``--no-compress`` is meaningful either way.  The batching
-    knobs (buckets, linger) apply to the continuous runtime only."""
+    knobs (buckets, linger) and the event-loop profiler apply to the
+    continuous runtime only."""
     from repro.serving.runtime import RuntimeConfig
 
-    return RuntimeConfig(compress_handoff=not no_compress)
+    profiler = None
+    if profile:
+        from repro.serving.obs.profiler import EventLoopProfiler
+
+        profiler = EventLoopProfiler()
+    return RuntimeConfig(compress_handoff=not no_compress, profiler=profiler)
 
 
 def main(argv=None):
@@ -56,6 +62,15 @@ def main(argv=None):
                          "straggling samples on the twin replica "
                          "(partial-batch re-execution); 'batch' re-issues "
                          "the whole micro-batch")
+    ap.add_argument("--trace-out", default="",
+                    help="write the per-request relay span trace as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing); '.jsonl' suffix emits span "
+                         "records instead")
+    ap.add_argument("--profile", action="store_true",
+                    help="wall-clock event-loop profiler for the continuous "
+                         "runtime (event counts, per-event-type handler "
+                         "time, heap ops); report lands in the summary")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
     if args.telemetry_context and args.policy in ("ppo", "sac"):
@@ -93,15 +108,27 @@ def main(argv=None):
         "sac": lambda: pol.SACPolicy(seed=args.seed),
     }[args.policy]()
 
-    runtime_cfg = resolve_runtime_config(args.runtime, args.no_compress)
+    runtime_cfg = resolve_runtime_config(args.runtime, args.no_compress,
+                                         profile=args.profile)
     engine = ServingEngine(policy, qt, cfg, executor=ex,
                            runtime=args.runtime, runtime_cfg=runtime_cfg)
     records = engine.run(reqs)
     summary = summarize(records)
     if engine.telemetry is not None:
-        from repro.serving.metrics import export_runtime_telemetry
+        from repro.serving.obs.export import export_runtime_telemetry
 
         summary["runtime_telemetry"] = export_runtime_telemetry(engine.telemetry)
+    if args.trace_out:
+        from repro.serving.obs.export import (write_chrome_trace,
+                                              write_spans_jsonl)
+
+        writer = (write_spans_jsonl if args.trace_out.endswith(".jsonl")
+                  else write_chrome_trace)
+        writer(engine.tracer, args.trace_out)
+        print(f"trace ({engine.tracer.coverage():.1%} of completed requests) "
+              f"-> {args.trace_out}")
+    if args.profile and runtime_cfg.profiler is not None:
+        summary["event_loop_profile"] = runtime_cfg.profiler.report()
     print(json.dumps(summary, indent=2))
     if args.out:
         with open(args.out, "w") as f:

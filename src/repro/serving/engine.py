@@ -22,12 +22,14 @@ import numpy as np
 
 from repro.core.context import Request, context_vector
 from repro.core.policies import Policy
+from repro.core.program import phase_name
 from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
+from repro.serving.obs.tracer import SpanTracer
 from repro.serving.runtime.telemetry import FaultCounters
 from repro.serving.runtime.transport import HandoffTransport, TransportConfig
 
@@ -194,7 +196,8 @@ class ServingEngine:
             else HandoffTransport(TransportConfig(compress=False))
         )
         self.telemetry = None  # populated by the continuous runtime
-        self.trace = {}  # per-request phase timestamps (continuous only)
+        self.tracer = SpanTracer()  # structured spans (both runtimes)
+        self.trace = {}  # per-request phase timestamps (legacy dict view)
         self.fault_counters = FaultCounters()
 
     @property
@@ -238,11 +241,13 @@ class ServingEngine:
             )
             records = rt.run(requests)
             self.telemetry = rt.telemetry
+            self.tracer = rt.tracer
             self.trace = rt.trace
             self.fault_counters = rt.fault_counters
             return records
         pools = Pools(self.cfg)
         per_item = straggler_mode(self.cfg) == "item"  # validates the mode
+        tracer = self.tracer = SpanTracer()
         fc = self.fault_counters = FaultCounters()
         if self.cfg.fail_replica is not None:
             fc.replica_failures = 1
@@ -279,6 +284,7 @@ class ServingEngine:
             kept_slow, tripped, draws = partition_stragglers(
                 self.cfg, [req.rid]
             )
+            nominal_edge = seg_durs[0]  # pre-straggler, for the marker time
             if prog.is_relay:
                 if tripped:
                     seg_durs[0] = lat.reissue_latency(
@@ -291,11 +297,34 @@ class ServingEngine:
 
             # segment-level pool holds: each pool is occupied only for the
             # duration of its own segment; hops add wire latency between
+            tracer.start_request(req.rid, now, arm_idx, arm.label)
+            nbytes = self.transport.wire_bytes(arm.family)
             ready = now
             done = now
             for k, seg in enumerate(prog.segments):
                 done = pools.acquire(seg.pool, ready, seg_durs[k])
+                start = done - seg_durs[k]
+                name = phase_name(prog, k)
+                tracer.enqueue(req.rid, name, ready)
+                tracer.start_segment(req.rid, name, start, seg.pool,
+                                     n_items=1, bucket=1, seg_idx=k)
+                tracer.end_segment(req.rid, done)
+                if k == 0 and prog.is_relay and tripped:
+                    # detector trips once the edge exceeds (reissue−1)× its
+                    # nominal service time — the singleton-batch analog of
+                    # the continuous runtime's detection event
+                    tracer.reissue(
+                        req.rid,
+                        start + nominal_edge
+                        * max(self.cfg.straggler_reissue - 1.0, 0.0),
+                        partial=per_item,
+                    )
+                if k < prog.n_hops:
+                    tracer.hop(req.rid, k, done, done + lb.hop_s[k],
+                               nbytes, compressed=self.transport.cfg.compress,
+                               pool=seg.pool)
                 ready = done + (lb.hop_s[k] if k < prog.n_hops else 0.0)
+            tracer.end_request(req.rid, done)
             t_total = done - req.arrival
             wait = t_total - lb.total
 
@@ -310,6 +339,7 @@ class ServingEngine:
             records.append(
                 Record(req.rid, arm_idx, r_report, t_total, q, ctx, wait)
             )
+        self.trace = tracer.legacy_view()
         return records
 
 

@@ -57,10 +57,24 @@ def quality_metrics(x_gen: np.ndarray, prompt: synth.Prompt) -> Dict[str, float]
     return {"clip": clip, "ir": ir, "pick": pick, "aes": aes, "ocr": ocr}
 
 
-def export_runtime_telemetry(telemetry) -> Dict[str, dict]:
-    """Per-pool runtime telemetry export (queue depth, batch occupancy,
-    bytes transferred) from a `repro.serving.runtime` telemetry object —
-    the benchmark/dashboard-facing view of the continuous-batching engine."""
-    if telemetry is None:
-        return {}
-    return telemetry.summary()
+# historical API, now in repro.serving.obs.export — resolved lazily via
+# __getattr__ below so importing it still works but warns (the
+# distributed.compression idiom): telemetry export is observability, not a
+# quality oracle, and lives with the other exporters.
+_MOVED = ("export_runtime_telemetry",)
+
+
+def __getattr__(name: str):
+    if name in _MOVED:
+        import warnings
+
+        warnings.warn(
+            f"repro.serving.metrics.{name} moved to "
+            f"repro.serving.obs.export.{name}; this re-export will be "
+            f"removed",
+            DeprecationWarning, stacklevel=2,
+        )
+        import repro.serving.obs.export as obs_export
+
+        return getattr(obs_export, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,221 @@
+"""Structured per-request span tracing keyed to the RelayProgram IR.
+
+One request's execution becomes an ordered list of :class:`Span` objects
+that *tile* the interval from arrival to completion with no gaps:
+
+  queue:edge → edge → hop0 → queue:device → device          (2-hop relay)
+  queue:edge → edge → hop0 → queue:mid1 → mid1 → hop1 → …   (N-hop cascade)
+
+* ``queue:<seg>`` — time the segment's work item sat in the micro-batch
+  aggregator (or, in the sequential engine, waited for a free replica);
+* ``<seg>`` — the segment's service span, annotated with pool, replica,
+  batch id, bucket and batch membership;
+* ``hop<k>`` — the inter-segment latent transfer, annotated with wire
+  bytes and compression;
+* zero-length ``reissue`` markers record the straggler detector tripping
+  on a request whose own draw exceeded the re-issue threshold (the same
+  request-intrinsic criterion the fault counters use, so marker sets are
+  parity-comparable across runtimes).
+
+Because the spans tile the request's lifetime, per-segment attribution
+sums to the engine's ``t_total`` exactly (the golden test in
+``tests/test_runtime_parity.py`` holds both runtimes to 1e-6).
+
+Every timestamp is the *simulated* clock.  The tracer never draws random
+numbers and never advances time — tracing on vs off is bit-identical in
+arm decisions, quality and fault counters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# span kinds
+SEGMENT = "segment"
+HOP = "hop"
+QUEUE = "queue"
+REISSUE = "reissue"
+
+
+@dataclass
+class Span:
+    """One contiguous slice of a request's lifetime on the simulated clock."""
+
+    rid: int
+    name: str  # "edge" | "mid<k>" | "device" | "hop<k>" | "queue:<seg>" | "reissue"
+    kind: str  # SEGMENT | HOP | QUEUE | REISSUE
+    t0: float
+    t1: float
+    pool: Optional[str] = None
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def dur(self) -> float:
+        return self.t1 - self.t0
+
+    def as_dict(self) -> dict:
+        d = {"rid": self.rid, "name": self.name, "kind": self.kind,
+             "t0": self.t0, "t1": self.t1}
+        if self.pool is not None:
+            d["pool"] = self.pool
+        if self.meta:
+            d["meta"] = self.meta
+        return d
+
+
+@dataclass
+class RequestTrace:
+    """All spans of one request, plus its envelope (arrival → done)."""
+
+    rid: int
+    arrival: float
+    arm_idx: int
+    arm_label: Optional[str] = None
+    done: Optional[float] = None
+    spans: List[Span] = field(default_factory=list)
+
+    @property
+    def complete(self) -> bool:
+        return self.done is not None
+
+    @property
+    def t_total(self) -> Optional[float]:
+        return None if self.done is None else self.done - self.arrival
+
+    def attributed_s(self) -> float:
+        """Sum of queue + segment + hop span durations (reissue markers are
+        zero-length and contribute nothing)."""
+        return sum(s.dur for s in self.spans)
+
+
+class SpanTracer:
+    """Collects :class:`RequestTrace` objects from either serving runtime.
+
+    A request executes its program strictly sequentially (one segment at a
+    time), so at most one queue span and one segment span are open per rid
+    at any moment — the tracer tracks those and closes them as the engine
+    reports progress."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestTrace] = {}
+        self._open_queue: Dict[int, Span] = {}
+        self._open_seg: Dict[int, Span] = {}
+
+    # ------------------------------------------------------------------
+    # recording (engine-facing)
+    # ------------------------------------------------------------------
+
+    def start_request(self, rid: int, t: float, arm_idx: int,
+                      arm_label: Optional[str] = None) -> None:
+        self.requests[rid] = RequestTrace(rid, t, arm_idx, arm_label)
+
+    def enqueue(self, rid: int, seg_name: str, t: float) -> None:
+        """The segment's work item entered its pool queue at ``t``."""
+        self._open_queue[rid] = Span(rid, f"queue:{seg_name}", QUEUE, t, t)
+
+    def start_segment(self, rid: int, seg_name: str, t: float, pool: str,
+                      **meta) -> None:
+        """The segment's batch dispatched at ``t`` — closes the pending
+        queue span and opens the service span."""
+        q = self._open_queue.pop(rid, None)
+        if q is not None:
+            q.t1 = t
+            q.pool = pool
+            self.requests[rid].spans.append(q)
+        self._open_seg[rid] = Span(rid, seg_name, SEGMENT, t, t, pool,
+                                   dict(meta))
+
+    def end_segment(self, rid: int, t: float, **meta) -> None:
+        s = self._open_seg.pop(rid, None)
+        if s is not None:
+            s.t1 = t
+            s.meta.update(meta)
+            self.requests[rid].spans.append(s)
+
+    def hop(self, rid: int, hop_idx: int, t0: float, t1: float,
+            nbytes: int, compressed: bool, pool: Optional[str] = None) -> None:
+        self.requests[rid].spans.append(Span(
+            rid, f"hop{hop_idx}", HOP, t0, t1, pool,
+            {"bytes": nbytes, "compressed": compressed},
+        ))
+
+    def reissue(self, rid: int, t: float, partial: bool) -> None:
+        """Straggler detector tripped for this request (its own draw
+        exceeded the threshold) — zero-length marker at detection time."""
+        self.requests[rid].spans.append(Span(
+            rid, "reissue", REISSUE, t, t, None, {"partial": partial},
+        ))
+
+    def end_request(self, rid: int, t: float) -> None:
+        self.requests[rid].done = t
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def completed(self) -> List[RequestTrace]:
+        return [r for r in self.requests.values() if r.complete]
+
+    def spans(self) -> Iterable[Span]:
+        for tr in self.requests.values():
+            yield from tr.spans
+
+    def coverage(self) -> float:
+        """Fraction of completed requests that carry at least one segment
+        span (the trace-completeness number the CI gate checks)."""
+        done = self.completed()
+        if not done:
+            return 0.0
+        traced = sum(
+            1 for tr in done if any(s.kind == SEGMENT for s in tr.spans)
+        )
+        return traced / len(done)
+
+    def legacy_view(self) -> Dict[int, dict]:
+        """The historical ``engine.trace`` dict-of-timestamps view, derived
+        from spans: ``<seg>_start`` / ``<seg>_done`` per segment,
+        ``<seg>_enqueue`` for post-hop segments, accumulated ``transfer_s``
+        / ``transfer_bytes``, ``reissued_at`` and ``done``."""
+        out: Dict[int, dict] = {}
+        for rid, tr in self.requests.items():
+            d: dict = {"arrival": tr.arrival, "arm": tr.arm_idx}
+            n_hops_seen = 0
+            for s in tr.spans:
+                if s.kind == SEGMENT:
+                    d[f"{s.name}_start"] = s.t0
+                    d[f"{s.name}_done"] = s.t1
+                elif s.kind == HOP:
+                    n_hops_seen += 1
+                    d["transfer_s"] = d.get("transfer_s", 0.0) + s.dur
+                    d["transfer_bytes"] = (
+                        d.get("transfer_bytes", 0) + s.meta.get("bytes", 0)
+                    )
+                elif s.kind == QUEUE and n_hops_seen:
+                    # queue spans after a hop mirror the old "<seg>_enqueue"
+                    d[f"{s.name.split(':', 1)[1]}_enqueue"] = s.t0
+                elif s.kind == REISSUE:
+                    d["reissued_at"] = s.t0
+            if tr.done is not None:
+                d["done"] = tr.done
+            out[rid] = d
+        return out
+
+
+def span_structure(tracer: SpanTracer, rid: int,
+                   kinds: Tuple[str, ...] = (SEGMENT, HOP, REISSUE)
+                   ) -> List[Tuple[str, str]]:
+    """Structural signature of one request's trace: the ordered
+    ``(kind, name)`` list over the given kinds, with reissue markers sorted
+    into a canonical position (their *timing* is runtime-specific; their
+    *presence* is request-intrinsic).  The cross-runtime parity suite
+    asserts the sequential and continuous engines agree on this."""
+    tr = tracer.requests[rid]
+    ordered = [(s.kind, s.name) for s in tr.spans if s.kind in kinds
+               and s.kind != REISSUE]
+    markers = sorted(
+        (s.kind, s.name) for s in tr.spans if s.kind == REISSUE
+    )
+    return ordered + markers

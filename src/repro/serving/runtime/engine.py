@@ -63,6 +63,7 @@ from repro.serving.arms import ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
+from repro.serving.obs.tracer import SpanTracer
 
 from .batching import DEFAULT_BUCKETS, MicroBatchAggregator, bucketize
 from .events import (ARRIVE, BATCH_DONE, DEVICE_READY, FLUSH, REPLICA_FAIL,
@@ -80,7 +81,12 @@ class RuntimeConfig:
     compress_handoff: bool = True
     bw_mbps: float = 20.0
     quality_sensitivity: float = 1.0
-    trace: bool = True  # per-request phase timestamps (cheap; tests use it)
+    # span tracing (repro.serving.obs.tracer): structured per-request spans
+    # on the simulated clock — never perturbs decisions, quality or faults
+    trace: bool = True
+    # optional obs.profiler.EventLoopProfiler wall-clock hooks around the
+    # event-loop handler dispatch (the fleet-scale vectorization baseline)
+    profiler: Optional[object] = None
 
 
 @dataclass
@@ -120,6 +126,9 @@ class _Batch:
     dur: float  # nominal (straggler-free) service time incl. jitter
     gen: int = 0  # completion events carry the gen they were issued for
     twin: Optional[int] = None  # replica occupied by a re-issue
+    # rids whose own straggler draw tripped the re-issue threshold (the
+    # request-intrinsic set the tracer marks, matching the fault counters)
+    tripped: frozenset = frozenset()
 
 
 class ContinuousRuntime:
@@ -141,7 +150,12 @@ class ContinuousRuntime:
         self.transport = HandoffTransport.for_runtime(self.rt)
         self.telemetry = RuntimeTelemetry()
         self.fault_counters = self.telemetry.faults
-        self.trace: Dict[int, dict] = {}
+        self.tracer = SpanTracer()
+
+    @property
+    def trace(self) -> Dict[int, dict]:
+        """Historical per-request timestamp-dict view, derived from spans."""
+        return self.tracer.legacy_view()
 
     # ------------------------------------------------------------------
     # occupancy / backpressure
@@ -224,25 +238,40 @@ class ContinuousRuntime:
             if np.isfinite(t_recover):
                 evq.push(t_recover, REPLICA_RECOVER, (pool, idx))
 
-        while evq:
-            now, kind, payload = evq.pop()
-            if kind == ARRIVE:
-                self._on_arrive(payload, now)
-            elif kind == BATCH_DONE:
-                self._on_batch_done(*payload, now=now)
-            elif kind == DEVICE_READY:
-                self._on_segment_ready(payload, now)
-            elif kind == FLUSH:
-                self._dispatch(payload, now)
-            elif kind == STRAGGLER:
-                self._on_straggler(payload, now)
-            elif kind == STRAGGLER_PARTIAL:
-                self._on_straggler_partial(payload, now)
-            elif kind == REPLICA_FAIL:
-                self._on_replica_fail(*payload, now=now)
-            elif kind == REPLICA_RECOVER:
-                self._on_replica_recover(*payload, now=now)
+        prof = self.rt.profiler
+        if prof is None:
+            while evq:
+                now, kind, payload = evq.pop()
+                self._handle(kind, payload, now)
+        else:
+            from time import perf_counter
+
+            prof.start()
+            while evq:
+                now, kind, payload = evq.pop()
+                t0 = perf_counter()
+                self._handle(kind, payload, now)
+                prof.record(kind, perf_counter() - t0)
+            prof.stop(evq)
         return self.records
+
+    def _handle(self, kind: str, payload, now: float) -> None:
+        if kind == ARRIVE:
+            self._on_arrive(payload, now)
+        elif kind == BATCH_DONE:
+            self._on_batch_done(*payload, now=now)
+        elif kind == DEVICE_READY:
+            self._on_segment_ready(payload, now)
+        elif kind == FLUSH:
+            self._dispatch(payload, now)
+        elif kind == STRAGGLER:
+            self._on_straggler(payload, now)
+        elif kind == STRAGGLER_PARTIAL:
+            self._on_straggler_partial(payload, now)
+        elif kind == REPLICA_FAIL:
+            self._on_replica_fail(*payload, now=now)
+        elif kind == REPLICA_RECOVER:
+            self._on_replica_recover(*payload, now=now)
 
     # ------------------------------------------------------------------
 
@@ -267,10 +296,10 @@ class ContinuousRuntime:
             seg.steps * lat.STEP_COST[seg.pool] for seg in prog.segments
         ) + prog.n_hops * self.transport.transfer_time(arm.family, req.rtt_ms)
         self.pending[req.rid] = _Pending(req, arm_idx, ctx, occ, ideal)
-        if self.rt.trace:
-            self.trace[req.rid] = {"arrival": now, "arm": arm_idx}
-
         item = self._item(req, arm_idx, 0)
+        if self.rt.trace:
+            self.tracer.start_request(req.rid, now, arm_idx, arm.label)
+            self.tracer.enqueue(req.rid, item.phase, now)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
 
@@ -282,14 +311,17 @@ class ContinuousRuntime:
         return base * jitter
 
     def _straggler_plan(self, items: List[WorkItem]
-                        ) -> Tuple[float, List[WorkItem]]:
-        """Straggler draws for a dispatched batch → ``(slow, reissue_items)``.
+                        ) -> Tuple[float, List[WorkItem], frozenset]:
+        """Straggler draws for a dispatched batch →
+        ``(slow, reissue_items, tripped_rids)``.
 
         ``slow`` is the batch's slowdown (max over the members it keeps — a
         batch moves at the pace of its slowest sample); ``reissue_items``
         are the members to split off for per-item twin re-issue (empty under
         whole-batch mode, where tripped members instead fold into ``slow``
-        and the STRAGGLER cap handles the entire batch).  Stragglers hit
+        and the STRAGGLER cap handles the entire batch); ``tripped_rids``
+        are the requests whose own draw exceeded the threshold (what the
+        tracer marks as re-issued, in either mode).  Stragglers hit
         the first (edge) segment of relay programs only, mirroring the
         sequential engine.  Counters are per request so they match the
         sequential engine's exactly."""
@@ -300,11 +332,11 @@ class ContinuousRuntime:
             and self.arms[first.arm_idx].program.is_relay
         )
         if not is_relay_edge or self.cfg.straggler_prob <= 0.0:
-            return 1.0, []
+            return 1.0, [], frozenset()
         kept_slow, reissue_rids, draws = partition_stragglers(
             self.cfg, [it.rid for it in items]
         )
-        tripped = set(reissue_rids)
+        tripped = frozenset(reissue_rids)
         for rid, s in draws.items():
             if s > 1.0:
                 self.telemetry.record_straggler(
@@ -312,8 +344,8 @@ class ContinuousRuntime:
                 )
         if not per_item:
             slow = max([kept_slow] + [draws[r] for r in reissue_rids])
-            return slow, []
-        return kept_slow, [it for it in items if it.rid in tripped]
+            return slow, [], tripped
+        return kept_slow, [it for it in items if it.rid in tripped], tripped
 
     def _dispatch(self, pool: str, now: float) -> None:
         st = self.pools[pool]
@@ -335,7 +367,7 @@ class ContinuousRuntime:
             items, bucket = res
             replica = st.free.pop()
             dur = self._batch_duration(pool, items[0].steps, bucket)
-            slow, reissue_items = self._straggler_plan(items)
+            slow, reissue_items, tripped = self._straggler_plan(items)
             bid = next(self._batch_seq)
             detect = now + dur * max(self.cfg.straggler_reissue - 1.0, 0.0)
             if reissue_items:
@@ -361,7 +393,8 @@ class ContinuousRuntime:
                 )
                 sub_bid = next(self._batch_seq)
                 self._inflight[sub_bid] = _Batch(
-                    pool, None, reissue_items, detect, sub_dur
+                    pool, None, reissue_items, detect, sub_dur,
+                    tripped=tripped,
                 )
                 self.evq.push(detect, STRAGGLER_PARTIAL, sub_bid)
                 self._inflight[bid] = _Batch(pool, replica, kept, now, dur)
@@ -370,7 +403,8 @@ class ContinuousRuntime:
                 # detector hands its samples to the twin
                 done = now + dur * slow if kept else detect
             else:
-                self._inflight[bid] = _Batch(pool, replica, items, now, dur)
+                self._inflight[bid] = _Batch(pool, replica, items, now, dur,
+                                             tripped=tripped)
                 if slow > self.cfg.straggler_reissue:
                     # whole-batch mode lagging batch: the detector trips
                     # once it has exceeded (reissue−1)× its expected time;
@@ -383,7 +417,11 @@ class ContinuousRuntime:
             self.telemetry.record_batch(pool, len(items), bucket, dur, forced)
             if self.rt.trace:
                 for it in items:
-                    self.trace[it.rid][f"{it.phase}_start"] = now
+                    self.tracer.start_segment(
+                        it.rid, it.phase, now, pool, batch=bid,
+                        bucket=bucket, n_items=len(items), replica=replica,
+                        seg_idx=it.seg_idx,
+                    )
             self.evq.push(done, BATCH_DONE, (bid, 0))
         self.telemetry.record_depth(pool, now, st.agg.depth())
 
@@ -411,8 +449,12 @@ class ContinuousRuntime:
         st.busy_until[b.replica] = done
         self.telemetry.record_reissue(b.pool, n_items=len(b.items))
         if self.rt.trace:
-            for it in b.items:
-                self.trace[it.rid]["reissued_at"] = now
+            # mark only the members whose own draw tripped the detector —
+            # the request-intrinsic set the fault counters use, so marker
+            # sets are parity-comparable with the sequential engine even
+            # though the whole batch pays the re-issue cap
+            for rid in sorted(b.tripped):
+                self.tracer.reissue(rid, now, partial=False)
         self.evq.push(done, BATCH_DONE, (bid, 1))
 
     def _on_straggler_partial(self, bid: int, now: float) -> None:
@@ -436,7 +478,7 @@ class ContinuousRuntime:
         )
         if self.rt.trace:
             for it in b.items:
-                self.trace[it.rid]["reissued_at"] = now
+                self.tracer.reissue(it.rid, now, partial=True)
         self.evq.push(done, BATCH_DONE, (bid, 0))
 
     def _on_replica_fail(self, pool: str, idx: int, now: float) -> None:
@@ -480,14 +522,15 @@ class ContinuousRuntime:
                 tsec = self.transport.transfer_time(fam, it.req.rtt_ms)
                 self.telemetry.record_transfer(b.pool, nbytes)
                 if self.rt.trace:
-                    tr = self.trace[it.rid]
-                    tr[f"{it.phase}_done"] = now
-                    tr["transfer_s"] = tr.get("transfer_s", 0.0) + tsec
-                    tr["transfer_bytes"] = (
-                        tr.get("transfer_bytes", 0) + nbytes
+                    self.tracer.end_segment(it.rid, now)
+                    self.tracer.hop(
+                        it.rid, it.seg_idx, now, now + tsec, nbytes,
+                        compressed=self.transport.cfg.compress, pool=b.pool,
                     )
                 self.evq.push(now + tsec, DEVICE_READY, it)
             else:
+                if self.rt.trace:
+                    self.tracer.end_segment(it.rid, now)
                 self._complete(it, now)
         self._dispatch(b.pool, now)
 
@@ -496,7 +539,7 @@ class ContinuousRuntime:
         item = self._item(prev_item.req, prev_item.arm_idx,
                           prev_item.seg_idx + 1)
         if self.rt.trace:
-            self.trace[item.rid][f"{item.phase}_enqueue"] = now
+            self.tracer.enqueue(item.rid, item.phase, now)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
 
@@ -516,7 +559,7 @@ class ContinuousRuntime:
             dynamic_reward=self.dynamic_reward, arms=self.arms,
         )
         if self.rt.trace:
-            self.trace[item.rid]["done"] = now
+            self.tracer.end_request(item.rid, now)
         # clamp: ideal_s uses unjittered step costs, so a lone batch with
         # jitter < 1 could otherwise report a (nonsensical) negative wait
         self.records.append(Record(

@@ -65,17 +65,28 @@ class WorkItem:
 
 
 class EventQueue:
-    """Min-heap of (time, seq, kind, payload) with deterministic ordering."""
+    """Min-heap of (time, seq, kind, payload) with deterministic ordering.
+
+    Carries always-on integer op counters (pushes / pops / peak size) for
+    the event-loop profiler — the ROADMAP's vectorization item needs the
+    heap-op baseline, and bare int increments cost nothing measurable."""
 
     def __init__(self):
         self._heap: list = []
         self._seq = itertools.count()
+        self.n_pushed = 0
+        self.n_popped = 0
+        self.peak_size = 0
 
     def push(self, t: float, kind: str, payload: Any = None) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        self.n_pushed += 1
+        if len(self._heap) > self.peak_size:
+            self.peak_size = len(self._heap)
 
     def pop(self) -> Tuple[float, str, Any]:
         t, _, kind, payload = heapq.heappop(self._heap)
+        self.n_popped += 1
         return t, kind, payload
 
     def __len__(self) -> int:

@@ -2,7 +2,7 @@
 fault counters (replica failures, straggler re-issues).
 
 Collected by the continuous-batching engine and summarized through
-``repro.serving.metrics.export_runtime_telemetry`` for benchmarks and
+``repro.serving.obs.export.export_runtime_telemetry`` for benchmarks and
 dashboards.  Everything is plain Python counters — telemetry must never
 perturb the simulated clock.
 
@@ -14,7 +14,9 @@ identical workloads and fault regimes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict
+
+from repro.serving.obs.stats import DepthSeries
 
 
 @dataclass
@@ -61,7 +63,10 @@ class FaultCounters:
 
 @dataclass
 class PoolStats:
-    depth_samples: List[Tuple[float, int]] = field(default_factory=list)
+    # queue-depth distribution as bounded streaming stats (exact mean/max +
+    # reservoir quantiles) — the old per-sample list grew O(requests) and
+    # would OOM the ROADMAP's 10⁶-request fleet-scale replay
+    depth: DepthSeries = field(default_factory=DepthSeries)
     n_batches: int = 0
     batched_items: int = 0
     padded_slots: int = 0  # bucket capacity left empty by padding
@@ -93,7 +98,7 @@ class RuntimeTelemetry:
         return self.pools.setdefault(pool, PoolStats())
 
     def record_depth(self, pool: str, t: float, depth: int) -> None:
-        self._pool(pool).depth_samples.append((t, depth))
+        self._pool(pool).depth.add(t, depth)
 
     def record_batch(self, pool: str, n_items: int, bucket: int,
                      duration_s: float, forced: bool) -> None:
@@ -129,10 +134,10 @@ class RuntimeTelemetry:
     def summary(self) -> Dict[str, dict]:
         out = {}
         for pool, p in sorted(self.pools.items()):
-            depths = [d for _, d in p.depth_samples]
             out[pool] = {
-                "mean_queue_depth": float(sum(depths) / len(depths)) if depths else 0.0,
-                "max_queue_depth": int(max(depths)) if depths else 0,
+                "mean_queue_depth": p.depth.mean,
+                "max_queue_depth": p.depth.max,
+                "p95_queue_depth": p.depth.p95(),
                 "batch_occupancy": p.occupancy,
                 "mean_batch_size": p.mean_batch,
                 "n_batches": p.n_batches,

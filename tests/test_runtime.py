@@ -14,7 +14,7 @@ from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS
 from repro.serving.engine import (ServingEngine, SimConfig, make_requests,
                                   summarize)
-from repro.serving.metrics import export_runtime_telemetry
+from repro.serving.obs.export import export_runtime_telemetry
 from repro.serving.runtime import (EDGE, HandoffTransport, MicroBatchAggregator,
                                    RuntimeConfig, TransportConfig, WorkItem,
                                    batch_key_for, bucketize)

@@ -93,6 +93,57 @@ def test_runtime_parity(regime, compress, mode):
         assert fc.replica_failures == fc.replica_recoveries == 0
 
 
+@pytest.mark.parametrize("mode", ["item", "batch"])
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_span_structure_parity(regime, mode):
+    """Observability parity: both runtimes emit the same span *structure*
+    per request — the ordered (kind, name) sequence of segment, hop and
+    re-issue-marker spans.  Batch composition and hence timing differ, but
+    which segments ran, which hops fired and which requests tripped the
+    straggler detector are request-intrinsic."""
+    from repro.serving.obs.tracer import SEGMENT, span_structure
+
+    cfg = SimConfig(n_requests=120, mean_interarrival=1.5, seed=11,
+                    straggler_mode=mode, **REGIMES[regime])
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    eng_seq, _ = _run(cfg, reqs, qt, "sequential", True)
+    eng_cont, _ = _run(cfg, reqs, qt, "continuous", True)
+
+    assert eng_seq.tracer.coverage() == 1.0
+    assert eng_cont.tracer.coverage() == 1.0
+    for rid in sorted(r.rid for r in reqs):
+        assert span_structure(eng_seq.tracer, rid) == \
+            span_structure(eng_cont.tracer, rid), f"rid {rid}"
+        # the structure matches the chosen arm's program shape
+        arm = ARMS[eng_seq.tracer.requests[rid].arm_idx]
+        n_segs = sum(1 for s in eng_seq.tracer.requests[rid].spans
+                     if s.kind == SEGMENT)
+        assert n_segs == arm.program.n_segments
+
+
+@pytest.mark.parametrize("runtime", ["sequential", "continuous"])
+def test_attribution_sums_to_t_total(runtime):
+    """Golden observability test: per-request span attribution (queue +
+    segment + hop durations) reconstructs the engine's reported t_total
+    within 1e-6 — the spans tile arrival → done with no gaps or overlaps,
+    in both runtimes, under the degraded fault regime."""
+    from repro.serving.obs.stats import attribution_residual
+
+    cfg = SimConfig(n_requests=120, mean_interarrival=1.5, seed=11,
+                    **REGIMES["degraded"])
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    eng, recs = _run(cfg, reqs, qt, runtime, True)
+
+    assert attribution_residual(eng.tracer) < 1e-6
+    for rid, rec in recs.items():
+        tr = eng.tracer.requests[rid]
+        assert tr.complete
+        assert tr.t_total == pytest.approx(rec.t_total, abs=1e-6)
+        assert tr.attributed_s() == pytest.approx(rec.t_total, abs=1e-6)
+
+
 def test_sequential_prices_compressed_handoff():
     """Satellite bugfix lock: the sequential engine's hop pricing honors the
     transport's compression flag instead of always billing the raw fp16
