@@ -2,21 +2,36 @@
 traffic: where does the simulator's wall-clock go, and how hard is the
 event heap working?
 
-This is the measured baseline for the ROADMAP's fleet-scale item
-(vectorizing the event loop for 10⁶-request replays): per-event-type
-handler wall time, events/s, heap push/pop counts and peak size, from a
-heavy mixed workload (μ = 1.5 s, the fig6 congested regime) with
-stragglers and a replica outage so every handler type is exercised.
+This is the measured gate for the ROADMAP's fleet-scale item: the
+vectorized hot path (array-backed pool snapshots, batched completion
+fan-out, streaming arrivals, stale-flush dedup) must hold ≥3× the
+pre-refactor 5.0k events/s baseline on the 2,000-request heavy workload
+(μ = 1.5 s, the fig6 congested regime, with stragglers and a replica
+outage so every handler type is exercised).
 
-The profiler is wall-clock only — it never touches the simulated clock or
-any RNG stream, so the profiled run's records are bit-identical to an
-unprofiled one (asserted below).
+Three modes:
 
-  PYTHONPATH=src:. python benchmarks/profile_event_loop.py [--quick]
+  PYTHONPATH=src:. python benchmarks/profile_event_loop.py           # 2,000 req
+  PYTHONPATH=src:. python benchmarks/profile_event_loop.py --quick   #   300 req (CI gate)
+  PYTHONPATH=src:. python benchmarks/profile_event_loop.py --scale   # 100,000 req
+
+Each mode asserts two invariants before reporting a single number:
+
+* profiler-freeness — the profiled run's records are bit-identical to an
+  unprofiled one (the profiler only touches wall clocks);
+* cross-refactor bit-identity — the SHA-256 of the record stream
+  (arm, t_total hex, wait hex per request) matches the golden digest
+  captured from the pre-refactor engine in ``tests/golden/``.
+
+The ``--scale`` run doubles as the 10⁶-request-replay feasibility probe:
+streaming ARRIVE generation keeps the heap peak at O(window), not O(n).
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import sys
+from pathlib import Path
 
 from benchmarks.common import emit, save_json
 from repro.serving.engine import ServingEngine, SimConfig, make_requests
@@ -24,12 +39,24 @@ from repro.serving.obs.profiler import EventLoopProfiler
 from repro.serving.runtime import RuntimeConfig
 from repro.serving.workload import CyclePolicy, synthetic_quality_table
 
-N_REQUESTS = 2000
 HEAVY_MU = 1.5  # fig6's congested arrival regime
+MODES = {"quick": 300, "full": 2000, "scale": 100_000}
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
+GOLDEN_NAME = {"quick": "quick", "full": "heavy", "scale": "scale"}
 
 
-def run(quick: bool = False) -> dict:
-    n = 300 if quick else N_REQUESTS
+def record_digest(recs) -> str:
+    """SHA-256 over the exact bit patterns of the record stream — one
+    flipped mantissa bit anywhere changes the digest."""
+    payload = json.dumps(
+        [[r.arm, float(r.t_total).hex(), float(r.wait_s).hex()]
+         for r in recs]
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def run(mode: str = "full") -> dict:
+    n = MODES[mode]
     cfg = SimConfig(
         n_requests=n, mean_interarrival=HEAVY_MU, seed=7,
         straggler_prob=0.2, straggler_factor=6.0,
@@ -50,26 +77,40 @@ def run(quick: bool = False) -> dict:
     assert [r.arm for r in recs] == [r.arm for r in recs0]
     assert [r.t_total for r in recs] == [r.t_total for r in recs0]
 
+    # ... and the refactored loop must be bit-identical to the pre-refactor
+    # engine (golden digests captured at commit 751f03a)
+    digest = record_digest(recs)
+    golden_path = GOLDEN_DIR / f"profile_workload_{GOLDEN_NAME[mode]}.sha256"
+    golden = golden_path.read_text().strip()
+    assert digest == golden, (
+        f"record stream drifted from the pre-refactor engine "
+        f"({golden_path.name}): {digest} != {golden}"
+    )
+
     report = prof.report()
     report["workload"] = {
-        "n_requests": n, "mean_interarrival": HEAVY_MU,
+        "mode": mode, "n_requests": n, "mean_interarrival": HEAVY_MU,
         "straggler_prob": cfg.straggler_prob,
         "fail_replica": list(cfg.fail_replica),
+        "record_digest_sha256": digest,
     }
     top = max(report["per_event_type"].items(), key=lambda kv: kv[1]["wall_s"])
     emit(
         "event_loop_profile",
         1e6 * report["loop_wall_s"] / max(report["events"], 1),
+        f"mode={mode};"
         f"events={report['events']};"
         f"events_per_s={report['events_per_s']:.0f};"
         f"top={top[0]}:{top[1]['share']:.0%};"
         f"heap_pushes={report['heap_ops'].get('pushes', 0)};"
         f"heap_peak={report['heap_ops'].get('peak_size', 0)}",
     )
-    save_json("obs_event_loop_profile_quick" if quick
-              else "obs_event_loop_profile", report)
+    suffix = {"quick": "_quick", "full": "", "scale": "_scale"}[mode]
+    save_json(f"obs_event_loop_profile{suffix}", report)
     return report
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv)
+    mode = ("quick" if "--quick" in sys.argv
+            else "scale" if "--scale" in sys.argv else "full")
+    run(mode)

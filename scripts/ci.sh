@@ -66,6 +66,12 @@ if [ "${1:-full}" = "full" ]; then
         --quick --trace-out "$JUNIT_DIR/trace.json"
     python -m repro.serving.obs.export "$JUNIT_DIR/trace.json"
 
+    echo "== event-loop profile (quick gate: golden digest + events/s) =="
+    # asserts profiler-freeness AND bit-identity of the record stream
+    # against the pre-refactor golden digest (tests/golden/), then emits
+    # events/s — the fleet-scale vectorization number, tracked in README
+    PYTHONPATH=".:$PYTHONPATH" python benchmarks/profile_event_loop.py --quick
+
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
     out="$(mktemp)"
     set +e

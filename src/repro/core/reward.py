@@ -7,6 +7,7 @@ low-battery regimes).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict
 
 import numpy as np
@@ -37,14 +38,19 @@ class RewardInputs:
     c_bat: float = 0.0
 
 
-def dynamic_weights(c_txt: float, c_pref: float, c_bat: float):
+@lru_cache(maxsize=8)
+def _weights_for(txt: bool, pref: bool, bat: bool):
+    """Weight sets depend only on the three thresholded context flags, so
+    there are exactly 8 of them — built once each, then reused (the reward
+    path runs once per completed request).  Returned structures are shared:
+    treat them as read-only."""
     w = dict(BASE_WEIGHTS)
     w_time, w_cost, gamma = BASE_W_TIME, BASE_W_COST, BASE_GAMMA
-    if c_txt >= 0.5:  # text-rendering: raise OCR, drop visual weights
+    if txt:  # text-rendering: raise OCR, drop visual weights
         w["ocr"] *= 4.0
         for k in ("clip", "ir", "pick", "aes"):
             w[k] *= 0.5
-    if c_pref > 0.5:  # speed-sensitive: amplify time, halve quality
+    if pref:  # speed-sensitive: amplify time, halve quality
         w_time *= 2.5
         for k in w:
             w[k] *= 0.5
@@ -52,19 +58,29 @@ def dynamic_weights(c_txt: float, c_pref: float, c_bat: float):
         w["clip"] *= 1.5
         w["ir"] *= 1.5
         w_time *= 0.6
-    if c_bat >= 0.5:  # low battery: scale up cost and time penalties
+    if bat:  # low battery: scale up cost and time penalties
         w_cost *= 2.0
         w_time *= 1.5
     return w, w_time, w_cost, gamma
+
+
+def dynamic_weights(c_txt: float, c_pref: float, c_bat: float):
+    w, w_time, w_cost, gamma = _weights_for(
+        c_txt >= 0.5, c_pref > 0.5, c_bat >= 0.5
+    )
+    return dict(w), w_time, w_cost, gamma  # copy: callers may mutate
 
 
 def compute_reward(x: RewardInputs, *, dynamic: bool = True) -> float:
     """Eqs. 12–13 → compressed reward in (−η, η).  ``dynamic=False`` freezes
     the weights at their base values (Table IV "w/o Dynamic Reward")."""
     if dynamic:
-        w, w_time, w_cost, gamma = dynamic_weights(x.c_txt, x.c_pref, x.c_bat)
+        w, w_time, w_cost, gamma = _weights_for(
+            x.c_txt >= 0.5, x.c_pref > 0.5, x.c_bat >= 0.5
+        )
     else:
         w, w_time, w_cost, gamma = BASE_WEIGHTS, BASE_W_TIME, BASE_W_COST, BASE_GAMMA
-    r = sum(w[k] * x.quality.get(k, 0.0) for k in w)
+    q = x.quality
+    r = sum(w[k] * q.get(k, 0.0) for k in w)
     r -= w_time * x.t_total + w_cost * x.m_vram + gamma * x.l_dev
     return float(ETA * np.tanh(r / ETA))

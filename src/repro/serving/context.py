@@ -69,6 +69,42 @@ def backlog_horizon(cfg) -> float:
     return cfg.max_queue * BACKLOG_SECONDS_PER_SLOT
 
 
+def failure_schedule(cfg) -> Tuple[Tuple[str, int, float, float], ...]:
+    """Normalized replica-outage schedule of a SimConfig.
+
+    ``fail_replica`` accepts a single ``(pool, replica_idx, t_fail,
+    t_recover)`` tuple (the historical form) or a sequence of them
+    (concurrent/overlapping outages, e.g. both replicas of one pool).
+    Both engines derive their failure injection from this one accessor so
+    the schedules — and hence the fault counters — agree by construction."""
+    f = getattr(cfg, "fail_replica", None)
+    if f is None:
+        return ()
+    if isinstance(f[0], str):  # single outage tuple
+        return (tuple(f),)
+    return tuple(tuple(o) for o in f)
+
+
+def fallback_avail(arms, n_alive_by_pool: Mapping[str, int]) -> "np.ndarray":
+    """Availability mask for the everything-congested fallback.
+
+    When every arm is masked by the backlog horizon the scheduler must
+    still place the request *somewhere* — but "somewhere" must not be an
+    arm whose program routes through a pool with zero live replicas: work
+    queued on a fully-dead pool sits in the aggregator until (if ever) a
+    replica recovers, and with no recovery scheduled the request is lost.
+    The fallback therefore opens exactly the arms whose every pool has at
+    least one live replica; only if *no* such arm exists (total outage of
+    every pool some arm needs) does it degrade to the historical
+    all-arms-open behavior."""
+    out = np.zeros(len(arms), bool)
+    for a in arms:
+        out[a.idx] = all(n_alive_by_pool[p] > 0 for p in a.program.pools)
+    if not out.any():
+        out[:] = True
+    return out
+
+
 #: straggler mitigation modes: "item" re-issues only the straggling samples
 #: of a lagging micro-batch as a twin-replica sub-batch (partial-batch
 #: re-execution via ``Executor.generate_bucketed(..., subset=...)``);

@@ -27,6 +27,7 @@ from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
+                                   failure_schedule, fallback_avail,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
 from repro.serving.obs.tracer import SpanTracer
@@ -76,20 +77,31 @@ def make_requests(cfg: SimConfig, seed0: int = 0) -> List[Request]:
 
 
 class Pools:
-    """Replica free-time tracking + failure injection."""
+    """Replica free-time tracking + failure injection.
+
+    Outages come from ``serving.context.failure_schedule`` — a single
+    ``fail_replica`` tuple or a sequence of them (overlapping outages may
+    kill every replica of a pool; see :meth:`n_alive`)."""
 
     def __init__(self, cfg: SimConfig):
         self.free_at: Dict[str, List[float]] = {
             p: [0.0] * n for p, n in POOL_REPLICAS.items()
         }
         self.cfg = cfg
+        self.schedule = failure_schedule(cfg)
 
     def _replicas(self, pool: str, now: float):
         reps = list(enumerate(self.free_at[pool]))
-        f = self.cfg.fail_replica
-        if f and f[0] == pool and f[2] <= now < f[3]:
-            reps = [r for r in reps if r[0] != f[1]]  # failover: skip dead replica
+        dead = {
+            i for p, i, t_fail, t_rec in self.schedule
+            if p == pool and t_fail <= now < t_rec
+        }
+        if dead:
+            reps = [r for r in reps if r[0] not in dead]  # failover
         return reps
+
+    def n_alive(self, pool: str, now: float) -> int:
+        return len(self._replicas(pool, now))
 
     def occupancy(self, pool: str, now: float) -> float:
         reps = self._replicas(pool, now)
@@ -107,9 +119,12 @@ class Pools:
         """Run a phase of `duration` on the earliest-available replica;
         returns completion time."""
         reps = self._replicas(pool, ready)
-        if not reps:  # total pool outage: wait for recovery
-            start = self.cfg.fail_replica[3]
-            idx = self.cfg.fail_replica[1]
+        if not reps:  # total pool outage: wait for the earliest recovery
+            t_rec, idx = min(
+                (t_rec, i) for p, i, t_fail, t_rec in self.schedule
+                if p == pool and t_fail <= ready < t_rec
+            )
+            start = t_rec
         else:
             idx, free = min(reps, key=lambda r: r[1])
             start = max(ready, free)
@@ -249,10 +264,10 @@ class ServingEngine:
         per_item = straggler_mode(self.cfg) == "item"  # validates the mode
         tracer = self.tracer = SpanTracer()
         fc = self.fault_counters = FaultCounters()
-        if self.cfg.fail_replica is not None:
-            fc.replica_failures = 1
-            if np.isfinite(self.cfg.fail_replica[3]):
-                fc.replica_recoveries = 1
+        for _pool, _idx, _t_fail, t_rec in failure_schedule(self.cfg):
+            fc.replica_failures += 1
+            if np.isfinite(t_rec):
+                fc.replica_recoveries += 1
         records = []
         pending = sorted(requests, key=lambda r: r.arrival)
         for req in pending:
@@ -261,7 +276,13 @@ class ServingEngine:
             ctx = context_vector(req, occ, self._ctx_extra(pools, now))
             avail = self._avail(pools, now)
             if not avail.any():
-                avail = np.ones(self.n_arms, bool)  # enqueue on everything busy
+                # everything congested: enqueue anyway — but never onto an
+                # arm routing through a pool with zero live replicas (its
+                # request would block until a recovery that may never come)
+                avail = fallback_avail(
+                    self.arms,
+                    {p: pools.n_alive(p, now) for p in POOL_REPLICAS},
+                )
             arm_idx = self.policy.select(ctx, avail)
             arm = self.arms[arm_idx]
             prog = arm.program

@@ -19,6 +19,7 @@ battery are simulated (as in the paper's own testbed).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional, Tuple
 
 import numpy as np
@@ -88,12 +89,23 @@ class LatencyBreakdown:
         return sum(self.segment_s) + sum(self.hop_s)
 
 
+def wire_seconds(family: Optional[str], bw_mbps: float = 20.0,
+                 compressed: bool = False) -> float:
+    """RTT-free serialization time of one latent handoff payload.
+
+    Split out of :func:`transfer_time` so hot paths can precompute it per
+    (family, transport) once and add only the per-request RTT term."""
+    if family is None:
+        return 0.0
+    payload = latent_wire_bytes(family, compressed=compressed)
+    return payload * 8 / (bw_mbps * 1e6)
+
+
 def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
                   compressed: bool = False) -> float:
     if family is None:
         return 0.0
-    payload = latent_wire_bytes(family, compressed=compressed)
-    return rtt_ms / 1000.0 + payload * 8 / (bw_mbps * 1e6)
+    return rtt_ms / 1000.0 + wire_seconds(family, bw_mbps, compressed)
 
 
 def _jitter(rng: Optional[np.random.Generator]) -> float:
@@ -139,9 +151,11 @@ def program_wire_bytes(program: RelayProgram,
     )
 
 
+@lru_cache(maxsize=None)
 def program_vram(program: RelayProgram) -> float:
     """Peak model VRAM across the program's segments (segments hold their
-    pools one at a time, so the peak is the max, not the sum)."""
+    pools one at a time, so the peak is the max, not the sum).  Cached —
+    programs are frozen and the reward path asks per completion."""
     return max(VRAM_GB[seg.pool] for seg in program.segments)
 
 

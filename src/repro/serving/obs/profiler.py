@@ -33,6 +33,7 @@ class EventLoopProfiler:
         self.t_start: Optional[float] = None
         self.t_stop: Optional[float] = None
         self.heap: Dict[str, int] = {}
+        self.stale: Dict[str, int] = {}
 
     # engine-facing hooks -------------------------------------------------
 
@@ -42,6 +43,13 @@ class EventLoopProfiler:
     def record(self, kind: str, wall_s: float) -> None:
         self.counts[kind] = self.counts.get(kind, 0) + 1
         self.wall_s[kind] = self.wall_s.get(kind, 0.0) + wall_s
+
+    def record_stale(self, kind: str) -> None:
+        """An event popped but discarded without running its handler (e.g.
+        a FLUSH superseded by a later deadline for the same pool).  Counted
+        separately so ``events``/``events_per_s`` keep measuring *handled*
+        work and stale volume is visible in the report."""
+        self.stale[kind] = self.stale.get(kind, 0) + 1
 
     def stop(self, evq=None) -> None:
         self.t_stop = time.perf_counter()
@@ -87,5 +95,6 @@ class EventLoopProfiler:
             # loop overhead = pop + dispatch machinery outside the handlers
             "loop_overhead_s": max(wall - total_handler_s, 0.0),
             "per_event_type": per_kind,
+            "stale_events": dict(sorted(self.stale.items())),
             "heap_ops": self.heap,
         }

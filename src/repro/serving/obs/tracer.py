@@ -37,7 +37,7 @@ QUEUE = "queue"
 REISSUE = "reissue"
 
 
-@dataclass
+@dataclass(slots=True)
 class Span:
     """One contiguous slice of a request's lifetime on the simulated clock."""
 
@@ -63,7 +63,7 @@ class Span:
         return d
 
 
-@dataclass
+@dataclass(slots=True)
 class RequestTrace:
     """All spans of one request, plus its envelope (arrival → done)."""
 

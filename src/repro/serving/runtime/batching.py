@@ -59,6 +59,11 @@ class MicroBatchAggregator:
         self.max_batch = self.buckets[-1]
         self.linger_s = linger_s
         self.queues: "OrderedDict[BatchKey, Deque[WorkItem]]" = OrderedDict()
+        # running aggregates: the engine's backpressure pass reads depth and
+        # pending steps on every arrival, so these must be O(1), not a scan
+        # over every queued item (the pre-vectorization hot-path cost)
+        self._depth = 0
+        self._pending_steps = 0
 
     def push(self, item: WorkItem, now: float) -> None:
         item.enqueue_t = now
@@ -66,13 +71,15 @@ class MicroBatchAggregator:
         if key.pool != self.pool:
             raise ValueError(f"item for pool {key.pool} pushed to {self.pool}")
         self.queues.setdefault(key, deque()).append(item)
+        self._depth += 1
+        self._pending_steps += item.steps
 
     def depth(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        return self._depth
 
     def pending_steps(self) -> int:
         """Total denoising steps queued (drives the backlog estimate)."""
-        return sum(it.steps for q in self.queues.values() for it in q)
+        return self._pending_steps
 
     def _oldest_key(self) -> Optional[BatchKey]:
         best, best_t = None, None
@@ -115,4 +122,6 @@ class MicroBatchAggregator:
         items = [q.popleft() for _ in range(n)]
         if not q:
             del self.queues[key]
+        self._depth -= n
+        self._pending_steps -= sum(it.steps for it in items)
         return items, bucketize(n, self.buckets)

@@ -47,10 +47,34 @@ batch amortizes, so per-item cost shrinks toward ``growth·t₁`` (see
 ``benchmarks/roofline.py`` for the arithmetic-intensity argument; the
 growth coefficient is calibrated against real ``Executor.generate_bucketed``
 timings by ``scripts/calibrate_batch_cost.py``).
+
+Hot-path layout (the fleet-scale vectorization, benchmarks/
+profile_event_loop.py):
+
+* replica ``busy_until`` times and failure flags live in two runtime-wide
+  numpy arrays (each pool's list is a slice view), so the per-arrival
+  occupancy/backlog/availability pass is one vectorized sweep
+  (:meth:`ContinuousRuntime._snapshot`), cached on ``(now, state
+  version)`` and invalidated by any pool mutation;
+* ``_on_batch_done`` works per *batch*: every member shares the arm and
+  segment (the BatchKey invariant), so quality penalties, wire bytes,
+  occupancy keys and reward weights are per-arm precomputes, leaving only
+  the per-item RNG-free tail (reward, policy update, record) in the loop;
+* ARRIVE events are *streamed*: the sorted arrival list reserves its seq
+  band up front (``EventQueue.reserve``) and each arrival is pushed
+  lazily as the clock approaches it, bounding the heap by the in-flight
+  window instead of the workload size (10⁶-request replays keep a
+  constant-size heap);
+* superseded FLUSH events (the aggregator deadline moved) are tagged with
+  a per-pool generation and dropped on pop instead of running a no-op
+  dispatch pass.
+
+Every one of these preserves bit-identity of records, fault counters and
+span structure with the pre-vectorization engine (tests/golden/
+runtime_records.json; tests/test_golden_bitidentity.py).
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -61,6 +85,7 @@ from repro.core.program import phase_name
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, POOL_REPLICAS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
+                                   failure_schedule, fallback_avail,
                                    partition_stragglers, pool_key,
                                    straggler_mode, telemetry_features)
 from repro.serving.obs.tracer import SpanTracer
@@ -71,6 +96,12 @@ from .events import (ARRIVE, BATCH_DONE, DEVICE_READY, FLUSH, REPLICA_FAIL,
                      EventQueue, WorkItem)
 from .telemetry import RuntimeTelemetry
 from .transport import HandoffTransport
+
+#: arrivals kept ahead of the simulated clock in the event heap — the
+#: streaming window.  Any value ≥ 1 yields the exact pre-fill pop order
+#: (reserved seqs break ties identically); a modest cushion keeps the
+#: producer entirely off the profile.
+ARRIVAL_WINDOW = 256
 
 
 @dataclass
@@ -93,9 +124,12 @@ class RuntimeConfig:
 class _PoolState:
     n: int
     free: List[int]
-    busy_until: List[float]
+    busy_until: "np.ndarray"  # slice view into the runtime-wide array
     agg: MicroBatchAggregator
-    next_flush: float = -1.0  # dedupe pending FLUSH events
+    # deadline of the single live FLUSH event (None: no flush pending);
+    # flush_gen tags events so superseded ones are dropped on pop
+    next_flush: Optional[float] = None
+    flush_gen: int = 0
     failed: Set[int] = field(default_factory=set)  # injected outages
 
     @property
@@ -160,6 +194,10 @@ class ContinuousRuntime:
     # ------------------------------------------------------------------
     # occupancy / backpressure
     # ------------------------------------------------------------------
+    # _occ_pool/_backlog/_avail are the scalar reference implementations
+    # (kept for tests and one-off pool states); the event loop reads the
+    # vectorized-and-cached _snapshot instead, which computes the same
+    # floats in the same order.
 
     def _occ_pool(self, st: _PoolState, now: float) -> float:
         if st.n_alive == 0:
@@ -199,6 +237,43 @@ class ContinuousRuntime:
             out[a.idx] = all(backlog[p] < horizon for p in pools_used(a))
         return out
 
+    def _snapshot(self, now: float):
+        """One vectorized pass over the runtime-wide replica arrays →
+        ``(grouped occupancy, availability mask)``, bit-identical to the
+        scalar ``_occupancies``/``_avail`` pair.  Cached on ``(now, state
+        version)``: any pool mutation bumps ``_ver`` and invalidates."""
+        snap = self._snap
+        if snap is not None and snap[0] == now and snap[1] == self._ver:
+            return snap[2], snap[3]
+        rem = self._busy_all - now
+        np.maximum(rem, 0.0, out=rem)
+        failed = self._failed_all
+        rem[failed] = 0.0
+        cnt = (self._busy_all > now) & ~failed
+        rem_pp = np.add.reduceat(rem, self._pool_starts)
+        cnt_pp = np.add.reduceat(cnt, self._pool_starts, dtype=np.int64)
+        horizon = self._horizon
+        occ: Dict[str, float] = {}
+        ok = self._pool_ok
+        for j, (p, st) in enumerate(self._pool_list):
+            alive = st.n - len(st.failed)
+            if alive == 0:
+                occ[p] = 1.0
+                ok[j] = False
+                continue
+            agg = st.agg
+            queued = agg.depth() / agg.max_batch
+            occ[p] = float(min(1.0, (int(cnt_pp[j]) + queued) / alive))
+            backlog = float(rem_pp[j]) / alive + (
+                agg.pending_steps() * self._pool_step_cost[j]
+                * self._pool_amort[j]
+            ) / alive
+            ok[j] = backlog < horizon
+        groups = aggregate_occupancy(occ)
+        avail = ~(self._arm_pool_mat & ~ok).any(axis=1)
+        self._snap = (now, self._ver, groups, avail)
+        return groups, avail
+
     def _ctx_extra(self, now: float) -> Optional[np.ndarray]:
         """Live telemetry features (queue depth, batch occupancy) for the
         context vector, when ``cfg.telemetry_context`` is enabled."""
@@ -215,33 +290,113 @@ class ContinuousRuntime:
     # event loop
     # ------------------------------------------------------------------
 
-    def run(self, requests: List[Request]):
-        from repro.serving.engine import Record
-
-        self.pools = {
-            p: _PoolState(
-                n=n, free=list(range(n)), busy_until=[0.0] * n,
+    def _setup_pools(self) -> None:
+        """Array-backed pool state: one runtime-wide ``busy_until`` float
+        array and one failure mask, with each pool's view sliced out (so
+        per-replica writes and the vectorized snapshot share storage)."""
+        names = list(POOL_REPLICAS)
+        total = sum(POOL_REPLICAS.values())
+        self._busy_all = np.zeros(total)
+        self._failed_all = np.zeros(total, bool)
+        self.pools = {}
+        starts = []
+        off = 0
+        for p in names:
+            n = POOL_REPLICAS[p]
+            starts.append(off)
+            self.pools[p] = _PoolState(
+                n=n, free=list(range(n)),
+                busy_until=self._busy_all[off:off + n],
                 agg=MicroBatchAggregator(p, self.rt.buckets, self.rt.linger_s),
             )
-            for p, n in POOL_REPLICAS.items()
-        }
+            off += n
+        self._pool_starts = np.array(starts)
+        self._pool_base = dict(zip(names, starts))
+        self._pool_list = list(self.pools.items())
+        self._pool_ok = np.empty(len(names), bool)
+        growth = self.rt.batch_cost_growth
+        self._pool_step_cost = [lat.STEP_COST[p] for p in names]
+        self._pool_amort = []
+        for p in names:
+            bmax = self.pools[p].agg.max_batch
+            self._pool_amort.append((1.0 + growth * (bmax - 1)) / bmax)
+        self._horizon = backlog_horizon(self.cfg)
+        self._ver = 0
+        self._snap = None
+
+    def _setup_arms(self) -> None:
+        """Per-arm precomputes for the batched hot path.  The transport is
+        warmed first so ``handoff_error``'s lazy JAX compile happens here,
+        not inside the first profiled BATCH_DONE handler."""
+        self.transport.warm({a.family for a in self.arms})
+        tcfg = self.transport.cfg
+        names = [p for p, _ in self._pool_list]
+        pool_j = {p: j for j, p in enumerate(names)}
+        na = self.n_arms
+        self._seg_info = [None] * na  # (phase, pool, steps) per segment
+        self._ideal_base = [0.0] * na  # zero-queue denoise seconds
+        self._arm_hops = [0] * na
+        self._arm_is_relay = [False] * na
+        self._wire_s = [0.0] * na  # RTT-free hop serialization seconds
+        self._q_penalty: List[Optional[float]] = [None] * na
+        self._occ_keys: List[Tuple[str, ...]] = [()] * na
+        self._arm_pool_mat = np.zeros((na, len(names)), bool)
+        for a in self.arms:
+            i, prog = a.idx, a.program
+            self._seg_info[i] = tuple(
+                (phase_name(prog, k), seg.pool, seg.steps)
+                for k, seg in enumerate(prog.segments)
+            )
+            self._ideal_base[i] = sum(
+                seg.steps * lat.STEP_COST[seg.pool] for seg in prog.segments
+            )
+            self._arm_hops[i] = prog.n_hops
+            self._arm_is_relay[i] = prog.is_relay
+            fam = a.family
+            self._wire_s[i] = lat.wire_seconds(
+                fam, tcfg.bw_mbps, tcfg.compress
+            )
+            if fam is not None and tcfg.compress:
+                self._q_penalty[i] = (
+                    tcfg.quality_sensitivity
+                    * self.transport.handoff_error(fam) * max(prog.n_hops, 1)
+                )
+            self._occ_keys[i] = tuple(pool_key(p) for p in pools_used(a))
+            for p in pools_used(a):
+                self._arm_pool_mat[i, pool_j[p]] = True
+
+    def run(self, requests: List[Request]):
+        from repro.serving.engine import Record, score_and_update
+
+        self._Record, self._score = Record, score_and_update
+        self._setup_pools()
+        self._setup_arms()
         self.pending: Dict[int, _Pending] = {}
         self.records: List[Record] = []
-        self._batch_seq = itertools.count()
+        self._batch_seq = 0
         self._inflight: Dict[int, _Batch] = {}
         evq = self.evq = EventQueue()
-        for req in sorted(requests, key=lambda r: r.arrival):
-            evq.push(req.arrival, ARRIVE, req)
-        if self.cfg.fail_replica is not None:
-            pool, idx, t_fail, t_recover = self.cfg.fail_replica
-            evq.push(t_fail, REPLICA_FAIL, (pool, idx))
+        # streaming arrivals: reserve the seq band the pre-fill would have
+        # used, then push each ARRIVE lazily as the clock approaches it —
+        # identical (t, seq) pop order with a heap bounded by the window
+        arrivals = sorted(requests, key=lambda r: r.arrival)
+        self._arrivals = arrivals
+        self._arrive_base = evq.reserve(len(arrivals))
+        self._next_arrival = 0
+        for pool, idx, t_fail, t_recover in failure_schedule(self.cfg):
+            evq.push(t_fail, REPLICA_FAIL, (pool, idx, t_recover))
             if np.isfinite(t_recover):
                 evq.push(t_recover, REPLICA_RECOVER, (pool, idx))
+        for _ in range(min(ARRIVAL_WINDOW, len(arrivals))):
+            self._push_next_arrival()
 
+        pools = self.pools
         prof = self.rt.profiler
         if prof is None:
             while evq:
                 now, kind, payload = evq.pop()
+                if kind == FLUSH and payload[1] != pools[payload[0]].flush_gen:
+                    continue  # superseded by a later deadline for this pool
                 self._handle(kind, payload, now)
         else:
             from time import perf_counter
@@ -249,11 +404,21 @@ class ContinuousRuntime:
             prof.start()
             while evq:
                 now, kind, payload = evq.pop()
+                if kind == FLUSH and payload[1] != pools[payload[0]].flush_gen:
+                    prof.record_stale(kind)
+                    continue
                 t0 = perf_counter()
                 self._handle(kind, payload, now)
                 prof.record(kind, perf_counter() - t0)
             prof.stop(evq)
         return self.records
+
+    def _push_next_arrival(self) -> None:
+        k = self._next_arrival
+        if k < len(self._arrivals):
+            self._next_arrival = k + 1
+            req = self._arrivals[k]
+            self.evq.push_at(req.arrival, self._arrive_base + k, ARRIVE, req)
 
     def _handle(self, kind: str, payload, now: float) -> None:
         if kind == ARRIVE:
@@ -263,7 +428,7 @@ class ContinuousRuntime:
         elif kind == DEVICE_READY:
             self._on_segment_ready(payload, now)
         elif kind == FLUSH:
-            self._dispatch(payload, now)
+            self._dispatch(payload[0], now)
         elif kind == STRAGGLER:
             self._on_straggler(payload, now)
         elif kind == STRAGGLER_PARTIAL:
@@ -276,29 +441,31 @@ class ContinuousRuntime:
     # ------------------------------------------------------------------
 
     def _item(self, req: Request, arm_idx: int, seg_idx: int) -> WorkItem:
-        prog = self.arms[arm_idx].program
-        seg = prog.segments[seg_idx]
-        return WorkItem(req, arm_idx, phase_name(prog, seg_idx), seg.pool,
-                        seg.steps, seg_idx=seg_idx)
+        phase, pool, steps = self._seg_info[arm_idx][seg_idx]
+        return WorkItem(req, arm_idx, phase, pool, steps, seg_idx=seg_idx)
 
     def _on_arrive(self, req: Request, now: float) -> None:
-        occ = self._occupancies(now)
+        self._push_next_arrival()  # keep the streaming window topped up
+        occ, avail = self._snapshot(now)
         ctx = context_vector(req, occ, self._ctx_extra(now))
-        avail = self._avail(now)
         if not avail.any():
-            avail = np.ones(self.n_arms, bool)  # everything congested: enqueue anyway
+            # everything congested: enqueue anyway — but never onto an arm
+            # routing through a pool with zero live replicas, where the
+            # work would sit in the aggregator with no dispatcher
+            avail = fallback_avail(
+                self.arms, {p: st.n_alive for p, st in self._pool_list}
+            )
         arm_idx = self.policy.select(ctx, avail)
-        arm = self.arms[arm_idx]
-        prog = arm.program
 
         # zero-queue latency: per-segment denoise + per-hop transfer
-        ideal = sum(
-            seg.steps * lat.STEP_COST[seg.pool] for seg in prog.segments
-        ) + prog.n_hops * self.transport.transfer_time(arm.family, req.rtt_ms)
+        ideal = self._ideal_base[arm_idx] + self._arm_hops[arm_idx] * (
+            req.rtt_ms / 1000.0 + self._wire_s[arm_idx]
+        )
         self.pending[req.rid] = _Pending(req, arm_idx, ctx, occ, ideal)
         item = self._item(req, arm_idx, 0)
         if self.rt.trace:
-            self.tracer.start_request(req.rid, now, arm_idx, arm.label)
+            self.tracer.start_request(req.rid, now, arm_idx,
+                                      self.arms[arm_idx].label)
             self.tracer.enqueue(req.rid, item.phase, now)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
@@ -327,10 +494,7 @@ class ContinuousRuntime:
         sequential engine's exactly."""
         per_item = straggler_mode(self.cfg) == "item"
         first = items[0]
-        is_relay_edge = (
-            first.seg_idx == 0
-            and self.arms[first.arm_idx].program.is_relay
-        )
+        is_relay_edge = first.seg_idx == 0 and self._arm_is_relay[first.arm_idx]
         if not is_relay_edge or self.cfg.straggler_prob <= 0.0:
             return 1.0, [], frozenset()
         kept_slow, reissue_rids, draws = partition_stragglers(
@@ -349,6 +513,7 @@ class ContinuousRuntime:
 
     def _dispatch(self, pool: str, now: float) -> None:
         st = self.pools[pool]
+        self._ver += 1  # callers mutated the pool (push/free) or we will
         while st.free and st.agg.depth() > 0:
             res = st.agg.next_batch(now)
             forced = False
@@ -358,9 +523,6 @@ class ContinuousRuntime:
                     res = st.agg.next_batch(now, force=True)
                     forced = True
                 else:
-                    if deadline is not None and deadline != st.next_flush:
-                        self.evq.push(deadline, FLUSH, pool)
-                        st.next_flush = deadline
                     break
             if res is None:
                 break
@@ -368,7 +530,8 @@ class ContinuousRuntime:
             replica = st.free.pop()
             dur = self._batch_duration(pool, items[0].steps, bucket)
             slow, reissue_items, tripped = self._straggler_plan(items)
-            bid = next(self._batch_seq)
+            bid = self._batch_seq
+            self._batch_seq = bid + 1
             detect = now + dur * max(self.cfg.straggler_reissue - 1.0, 0.0)
             if reissue_items:
                 # per-item mitigation: pre-stage a sub-batch of only the
@@ -391,7 +554,8 @@ class ContinuousRuntime:
                     / lat.batch_service_time(
                         pool, steps, bucket, self.rt.batch_cost_growth)
                 )
-                sub_bid = next(self._batch_seq)
+                sub_bid = self._batch_seq
+                self._batch_seq = sub_bid + 1
                 self._inflight[sub_bid] = _Batch(
                     pool, None, reissue_items, detect, sub_dur,
                     tripped=tripped,
@@ -423,6 +587,22 @@ class ContinuousRuntime:
                         seg_idx=it.seg_idx,
                     )
             self.evq.push(done, BATCH_DONE, (bid, 0))
+        # flush maintenance: at most one live FLUSH per pool.  A lingering
+        # sub-maximal batch (free replica available) arms a flush at its
+        # linger deadline; any other end state — queue drained, or every
+        # replica busy (a future BATCH_DONE's dispatch pass re-arms) —
+        # supersedes whatever event is still in the heap by bumping the
+        # generation, so the loop drops it on pop instead of running a
+        # no-op force-dispatch pass per superseded deadline.
+        if st.free and st.agg.depth() > 0:
+            deadline = st.agg.flush_deadline()
+            if deadline != st.next_flush:
+                st.flush_gen += 1
+                st.next_flush = deadline
+                self.evq.push(deadline, FLUSH, (pool, st.flush_gen))
+        elif st.next_flush is not None:
+            st.flush_gen += 1
+            st.next_flush = None
         self.telemetry.record_depth(pool, now, st.agg.depth())
 
     # ------------------------------------------------------------------
@@ -438,6 +618,7 @@ class ContinuousRuntime:
         if b is None or b.gen != 0:
             return
         st = self.pools[b.pool]
+        self._ver += 1
         b.gen = 1
         done = now + b.dur
         if st.free:  # twin replica picks up the speculative copy
@@ -467,6 +648,7 @@ class ContinuousRuntime:
         if b is None:
             return
         st = self.pools[b.pool]
+        self._ver += 1
         done = now + b.dur
         if st.free:  # twin replica hosts the re-run
             b.replica = st.free.pop()
@@ -481,19 +663,23 @@ class ContinuousRuntime:
                 self.tracer.reissue(it.rid, now, partial=True)
         self.evq.push(done, BATCH_DONE, (bid, 0))
 
-    def _on_replica_fail(self, pool: str, idx: int, now: float) -> None:
+    def _on_replica_fail(self, pool: str, idx: int, t_recover: float,
+                         now: float) -> None:
         """Injected outage: the replica accepts no new batches (in-flight
         work finishes); the pool fails over to its surviving replicas."""
         st = self.pools[pool]
+        self._ver += 1
         st.failed.add(idx)
+        self._failed_all[self._pool_base[pool] + idx] = True
         if idx in st.free:
             st.free.remove(idx)
-        t_rec = self.cfg.fail_replica[3]
-        self.telemetry.record_failure(pool, recovers=bool(np.isfinite(t_rec)))
+        self.telemetry.record_failure(pool, recovers=bool(np.isfinite(t_recover)))
 
     def _on_replica_recover(self, pool: str, idx: int, now: float) -> None:
         st = self.pools[pool]
+        self._ver += 1
         st.failed.discard(idx)
+        self._failed_all[self._pool_base[pool] + idx] = False
         if st.busy_until[idx] <= now and idx not in st.free:
             st.free.append(idx)
         self._dispatch(pool, now)
@@ -506,6 +692,7 @@ class ContinuousRuntime:
             return  # completion superseded by a straggler re-issue
         del self._inflight[bid]
         st = self.pools[b.pool]
+        self._ver += 1
         for replica in (b.replica, b.twin):
             if replica is None:
                 continue
@@ -513,25 +700,68 @@ class ContinuousRuntime:
             # a replica that failed mid-batch rejoins only on recovery
             if replica not in st.failed:
                 st.free.append(replica)
-        for it in b.items:
-            prog = self.arms[it.arm_idx].program
-            if it.seg_idx < prog.n_segments - 1:
-                # hop: the latent ships to the next segment's pool
-                fam = self.arms[it.arm_idx].family
+        # every member of a batch shares (arm, segment) — the BatchKey
+        # invariant — so the batch either hops or completes as a whole and
+        # per-arm quantities hoist out of the item loop
+        items = b.items
+        if items:
+            trace = self.rt.trace
+            tracer = self.tracer
+            first = items[0]
+            arm_idx = first.arm_idx
+            if first.seg_idx < len(self._seg_info[arm_idx]) - 1:
+                # hop: the latents ship to the next segment's pool
+                fam = self.arms[arm_idx].family
                 nbytes = self.transport.wire_bytes(fam)
-                tsec = self.transport.transfer_time(fam, it.req.rtt_ms)
-                self.telemetry.record_transfer(b.pool, nbytes)
-                if self.rt.trace:
-                    self.tracer.end_segment(it.rid, now)
-                    self.tracer.hop(
-                        it.rid, it.seg_idx, now, now + tsec, nbytes,
-                        compressed=self.transport.cfg.compress, pool=b.pool,
-                    )
-                self.evq.push(now + tsec, DEVICE_READY, it)
+                wire_s = self._wire_s[arm_idx]
+                compress = self.transport.cfg.compress
+                self.telemetry.record_transfer(
+                    b.pool, nbytes, n_items=len(items)
+                )
+                push = self.evq.push
+                for it in items:
+                    tsec = it.req.rtt_ms / 1000.0 + wire_s
+                    if trace:
+                        tracer.end_segment(it.rid, now)
+                        tracer.hop(
+                            it.rid, it.seg_idx, now, now + tsec, nbytes,
+                            compressed=compress, pool=b.pool,
+                        )
+                    push(now + tsec, DEVICE_READY, it)
             else:
-                if self.rt.trace:
-                    self.tracer.end_segment(it.rid, now)
-                self._complete(it, now)
+                penalty = self._q_penalty[arm_idx]
+                occ_keys = self._occ_keys[arm_idx]
+                policy, score = self.policy, self._score
+                dyn, arms = self.dynamic_reward, self.arms
+                Record, records = self._Record, self.records
+                pending, qt = self.pending, self.qt
+                for it in items:
+                    rid = it.rid
+                    if trace:
+                        tracer.end_segment(rid, now)
+                    pend = pending.pop(rid)
+                    t_total = now - pend.req.arrival
+                    q = qt[pend.req.rid, pend.arm_idx]
+                    if penalty is not None:
+                        q = dict(q)
+                        for k in ("clip", "ir"):
+                            if k in q:
+                                q[k] = q[k] - penalty
+                    occ = pend.occ
+                    l_dev = max(occ[k] for k in occ_keys)
+                    r_report = score(
+                        policy, pend.arm_idx, pend.ctx, q, t_total, l_dev,
+                        dynamic_reward=dyn, arms=arms,
+                    )
+                    if trace:
+                        tracer.end_request(rid, now)
+                    # clamp: ideal_s uses unjittered step costs, so a lone
+                    # batch with jitter < 1 could otherwise report a
+                    # (nonsensical) negative wait
+                    records.append(Record(
+                        pend.req.rid, pend.arm_idx, r_report, t_total, q,
+                        pend.ctx, max(0.0, t_total - pend.ideal_s),
+                    ))
         self._dispatch(b.pool, now)
 
     def _on_segment_ready(self, prev_item: WorkItem, now: float) -> None:
@@ -542,27 +772,3 @@ class ContinuousRuntime:
             self.tracer.enqueue(item.rid, item.phase, now)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
-
-    def _complete(self, item: WorkItem, now: float) -> None:
-        from repro.serving.engine import Record, score_and_update
-
-        pend = self.pending.pop(item.rid)
-        arm = self.arms[pend.arm_idx]
-        t_total = now - pend.req.arrival
-        q = self.transport.quality_delta(
-            arm.family, self.qt[pend.req.rid, pend.arm_idx],
-            n_hops=arm.n_hops,
-        )
-        l_dev = max(pend.occ[pool_key(p)] for p in pools_used(arm))
-        r_report = score_and_update(
-            self.policy, pend.arm_idx, pend.ctx, q, t_total, l_dev,
-            dynamic_reward=self.dynamic_reward, arms=self.arms,
-        )
-        if self.rt.trace:
-            self.tracer.end_request(item.rid, now)
-        # clamp: ideal_s uses unjittered step costs, so a lone batch with
-        # jitter < 1 could otherwise report a (nonsensical) negative wait
-        self.records.append(Record(
-            pend.req.rid, pend.arm_idx, r_report, t_total, q, pend.ctx,
-            max(0.0, t_total - pend.ideal_s),
-        ))

@@ -10,9 +10,8 @@ are fully deterministic for a given seed.
 from __future__ import annotations
 
 import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Tuple
 
 from repro.core.context import Request
 
@@ -40,7 +39,7 @@ EDGE = "edge"
 DEVICE = "device"
 
 
-@dataclass
+@dataclass(slots=True)
 class WorkItem:
     """One segment of one request's relay-program execution, queued on a
     pool.
@@ -69,17 +68,44 @@ class EventQueue:
 
     Carries always-on integer op counters (pushes / pops / peak size) for
     the event-loop profiler — the ROADMAP's vectorization item needs the
-    heap-op baseline, and bare int increments cost nothing measurable."""
+    heap-op baseline, and bare int increments cost nothing measurable.
+
+    :meth:`reserve` supports *streaming* event sources: a producer that
+    knows its events in advance (e.g. the engine's sorted arrival stream)
+    reserves a contiguous seq band up front and pushes each event lazily
+    via :meth:`push_at` when the simulation approaches it.  Because the
+    heap orders by ``(t, seq)``, a lazily pushed event with a reserved
+    (low) seq pops in exactly the position it would have occupied had it
+    been pre-filled — tie-breaking is bit-identical while the heap stays
+    bounded by the number of *in-flight* events instead of the total
+    event count."""
 
     def __init__(self):
         self._heap: list = []
-        self._seq = itertools.count()
+        self._next_seq = 0
         self.n_pushed = 0
         self.n_popped = 0
         self.peak_size = 0
 
+    def reserve(self, n: int) -> int:
+        """Reserve ``n`` consecutive seq numbers for out-of-band pushes;
+        returns the first reserved seq.  Subsequent :meth:`push` calls
+        allocate seqs strictly after the reserved band."""
+        base = self._next_seq
+        self._next_seq += n
+        return base
+
     def push(self, t: float, kind: str, payload: Any = None) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        seq = self._next_seq
+        self._next_seq = seq + 1
+        heapq.heappush(self._heap, (t, seq, kind, payload))
+        self.n_pushed += 1
+        if len(self._heap) > self.peak_size:
+            self.peak_size = len(self._heap)
+
+    def push_at(self, t: float, seq: int, kind: str, payload: Any = None) -> None:
+        """Push with an explicitly reserved seq (see :meth:`reserve`)."""
+        heapq.heappush(self._heap, (t, seq, kind, payload))
         self.n_pushed += 1
         if len(self._heap) > self.peak_size:
             self.peak_size = len(self._heap)

@@ -95,7 +95,12 @@ class RuntimeTelemetry:
         self.faults = FaultCounters()
 
     def _pool(self, pool: str) -> PoolStats:
-        return self.pools.setdefault(pool, PoolStats())
+        # not setdefault: that would construct (and discard) a PoolStats —
+        # including its reservoir buffer — on every hot-path call
+        p = self.pools.get(pool)
+        if p is None:
+            p = self.pools[pool] = PoolStats()
+        return p
 
     def record_depth(self, pool: str, t: float, depth: int) -> None:
         self._pool(pool).depth.add(t, depth)
@@ -110,8 +115,10 @@ class RuntimeTelemetry:
         if forced:
             p.forced_flushes += 1
 
-    def record_transfer(self, pool: str, n_bytes: int) -> None:
-        self._pool(pool).bytes_out += n_bytes
+    def record_transfer(self, pool: str, n_bytes: int, n_items: int = 1) -> None:
+        """Account ``n_items`` equal-sized latent handoffs leaving ``pool``
+        (one telemetry call per completed batch, not per item)."""
+        self._pool(pool).bytes_out += n_bytes * n_items
 
     def record_failure(self, pool: str, recovers: bool) -> None:
         self._pool(pool).failures += 1

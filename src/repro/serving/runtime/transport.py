@@ -81,6 +81,18 @@ class HandoffTransport:
             compressed=self.cfg.compress,
         )
 
+    def warm(self, families) -> None:
+        """Pre-measure the round-trip error for the given families.
+
+        ``handoff_error`` lazily traces + compiles the quantizer round-trip
+        through JAX on first use (~1 s); left lazy, that JIT fires inside
+        the first BATCH_DONE handler and lands in the event-loop profile
+        as simulated-scheduler cost it is not.  Engines call this once
+        before their loop starts."""
+        for fam in families:
+            if fam is not None:
+                self.handoff_error(fam)
+
     def handoff_error(self, family: str) -> float:
         """Measured relative error of the int8 round-trip for this family's
         handoff latents (cached; 0 when compression is off)."""

@@ -1,0 +1,172 @@
+"""Regression tests for the two event-loop hot-path bugs.
+
+1. Dead-pool fallback: when every arm is congestion-masked, the engine used
+   to fall back to ``avail = ones(n_arms)`` — which happily offers arms
+   whose relay programs route through pools with *zero* live replicas.  A
+   request sent there never completes (continuous runtime: the batch waits
+   forever for a free replica; sequential runtime: the acquire waits until
+   an infinite recovery time).  The fix (``context.fallback_avail``)
+   restricts the fallback to arms with at least one live replica in every
+   pool they use.
+
+2. Stale FLUSH events: ``_dispatch`` used to push a fresh FLUSH whenever an
+   aggregator's linger deadline moved, but never cancelled the superseded
+   one — on the heavy profile workload that made FLUSH the single biggest
+   event population (1,838 events for 2,000 requests).  Flushes now carry a
+   per-pool generation tag and the run loop drops stale ones before handler
+   dispatch, so ``events`` (handled work) < heap pops whenever a deadline
+   was superseded — with records bit-identical.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.serving.engine as seq_engine_mod
+import repro.serving.runtime.engine as rt_engine_mod
+from repro.core.policies import Policy
+from repro.serving.arms import ARMS
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.obs.profiler import EventLoopProfiler
+from repro.serving.runtime import RuntimeConfig
+from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+
+class FirstAvailPolicy(Policy):
+    """Lowest-index available arm — deterministic and, unlike CyclePolicy,
+    *sensitive* to the availability mask, so the fallback mask's contents
+    decide which pools requests route through."""
+
+    name = "FirstAvail"
+
+    def select(self, ctx, avail):
+        for i, ok in enumerate(avail):
+            if ok:
+                return int(i)
+        return 0
+
+
+def _dead_vega_cfg(n: int = 24) -> SimConfig:
+    # both vega replicas dead forever + max_queue=0 so the congestion
+    # horizon masks every arm on every arrival → the fallback path decides
+    # all routing.  Arms 0–5 use vega; arms 6–10 (F3 relays) do not.
+    return SimConfig(
+        n_requests=n, mean_interarrival=1.0, seed=5, max_queue=0,
+        fail_replica=[("vega", 0, 0.0, np.inf), ("vega", 1, 0.0, np.inf)],
+    )
+
+
+def _all_ones_fallback(arms, n_alive_by_pool):
+    # the pre-fix behaviour: everything-congested → offer every arm
+    return np.ones(len(arms), dtype=bool)
+
+
+@pytest.mark.parametrize("runtime", ["continuous", "sequential"])
+def test_fallback_avoids_dead_pools(runtime):
+    cfg = _dead_vega_cfg()
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    eng = ServingEngine(FirstAvailPolicy(), qt, cfg, runtime=runtime)
+    recs = eng.run(reqs)
+
+    assert len(recs) == cfg.n_requests
+    assert all(np.isfinite(r.t_total) for r in recs)
+    # every chosen arm routes only through pools with live replicas
+    for r in recs:
+        assert "vega" not in ARMS[r.arm].program.pools, \
+            f"rid {r.rid} routed through the dead vega pool (arm {r.arm})"
+
+
+def test_fallback_regression_old_behavior_loses_requests(monkeypatch):
+    """With the pre-fix all-ones fallback restored, FirstAvailPolicy picks
+    arm 0 (vega-standalone) and those requests never finish — the exact
+    failure mode the fix removes.  This test pins the *mechanism*: the
+    fixed run above only passes because fallback_avail masks dead pools."""
+    cfg = _dead_vega_cfg()
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+
+    # continuous runtime: the work item waits forever for a free replica,
+    # so the run drains its heap with requests still pending
+    monkeypatch.setattr(rt_engine_mod, "fallback_avail", _all_ones_fallback)
+    eng = ServingEngine(FirstAvailPolicy(), qt, cfg, runtime="continuous")
+    recs = eng.run(reqs)
+    assert len(recs) < cfg.n_requests
+
+    # sequential runtime: acquire waits for the (infinite) recovery time
+    monkeypatch.setattr(seq_engine_mod, "fallback_avail", _all_ones_fallback)
+    eng_s = ServingEngine(FirstAvailPolicy(), qt, cfg, runtime="sequential")
+    recs_s = eng_s.run(reqs)
+    assert any(not np.isfinite(r.t_total) for r in recs_s)
+
+
+def test_fallback_all_pools_dead_degrades_gracefully():
+    """When *no* arm has a fully-live program the mask must degrade to
+    all-True rather than all-False (an all-False avail would crash every
+    policy) — context.fallback_avail's documented edge case."""
+    from repro.serving.context import fallback_avail
+
+    avail = fallback_avail(ARMS, {p: 0 for p in
+                                  {p for a in ARMS for p in a.program.pools}})
+    assert avail.all()
+
+
+# ---------------------------------------------------------------------------
+# stale-flush dedup
+# ---------------------------------------------------------------------------
+
+
+def _bursty_cfg() -> SimConfig:
+    # μ = 0.02 s: same-arm companions arrive well inside the 0.25 s linger
+    # window, so buckets fill and dispatch *before* their armed FLUSH
+    # deadline — exactly the supersession the generation tag exists for
+    return SimConfig(n_requests=600, mean_interarrival=0.02, seed=3,
+                     straggler_prob=0.2, straggler_factor=6.0)
+
+
+def test_stale_flushes_are_skipped_not_handled():
+    cfg = _bursty_cfg()
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+
+    prof = EventLoopProfiler()
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                        runtime_cfg=RuntimeConfig(profiler=prof))
+    recs = eng.run(reqs)
+    rep = prof.report()
+
+    # the workload supersedes at least one flush, and superseded flushes
+    # are dropped on pop instead of running their handler: handled events
+    # < heap pops by exactly the stale count (pre-fix: events == pops and
+    # stale_events doesn't exist — every superseded FLUSH ran a handler)
+    n_stale = sum(rep["stale_events"].values())
+    assert rep["stale_events"].get("flush", 0) > 0
+    assert rep["heap_ops"]["pops"] - rep["events"] == n_stale
+    assert rep["events"] < rep["heap_ops"]["pops"]
+
+    # dropping stale flushes must not perturb a single scheduler-visible
+    # quantity: bit-identical records with the profiler off
+    eng0 = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous")
+    recs0 = eng0.run(reqs)
+    assert [(r.rid, r.arm, r.t_total, r.wait_s) for r in recs] == \
+        [(r.rid, r.arm, r.t_total, r.wait_s) for r in recs0]
+
+
+def test_at_most_one_live_flush_per_pool():
+    """The generation tag implies an invariant: at any moment at most one
+    *live* FLUSH exists per pool.  Cheap proxy over a full bursty run: the
+    number of handled flushes plus stale flushes equals the number of FLUSH
+    events ever pushed (none vanish, none double-run)."""
+    cfg = _bursty_cfg()
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    prof = EventLoopProfiler()
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                        runtime_cfg=RuntimeConfig(profiler=prof))
+    eng.run(reqs)
+    rep = prof.report()
+    handled = rep["per_event_type"].get("flush", {}).get("count", 0)
+    stale = rep["stale_events"].get("flush", 0)
+    non_flush = sum(v["count"] for k, v in rep["per_event_type"].items()
+                    if k != "flush")
+    assert handled + stale == rep["heap_ops"]["pushes"] - non_flush

@@ -1,0 +1,133 @@
+"""Golden bit-identity lock for the vectorized event loop.
+
+``tests/golden/runtime_records.json`` was captured from the pre-refactor
+continuous runtime (commit 751f03a) across 4 fault regimes × 2 straggler
+modes: per-request arm decisions, exact float bit patterns of ``t_total``
+and ``wait_s`` (``float.hex``), the fault counters and each request's span
+structure.  The vectorized hot path (array-backed pool snapshots, batched
+``_on_batch_done`` fan-out, streaming arrivals, stale-flush dedup) must
+reproduce every one of those bits — any reordered float reduction, RNG
+draw or heap tie-break shows up here as a hex mismatch.
+
+The second half is the property that underwrites streaming arrivals: heap
+``(t, seq)`` tie-breaking is insertion-ordered, and the reserved-seq-band
+path (``reserve``/``push_at``) pops in exactly the order the eager
+``push`` path would have, no matter when the lazy pushes happen.
+Hypothesis drives it when available; otherwise a seeded randomized sweep
+covers the same space (the container has no hypothesis wheel and installs
+are off-limits).
+"""
+from __future__ import annotations
+
+import json
+import random
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.obs.tracer import span_structure
+from repro.serving.runtime.events import EventQueue
+from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+GOLDEN = Path(__file__).parent / "golden" / "runtime_records.json"
+
+# the capture matrix (mirrors tests/test_runtime_parity.py REGIMES)
+REGIMES = {
+    "clean": {},
+    "stragglers": dict(straggler_prob=0.3, straggler_factor=8.0),
+    "replica_failure": dict(fail_replica=("sdxl", 0, 50.0, 400.0)),
+    "degraded": dict(straggler_prob=0.25, straggler_factor=6.0,
+                     fail_replica=("sd3l", 1, 30.0, 300.0)),
+}
+
+
+@pytest.mark.parametrize("mode", ["item", "batch"])
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_records_bit_identical_to_pre_refactor_engine(regime, mode):
+    golden = json.loads(GOLDEN.read_text())[f"{regime}/{mode}"]
+
+    cfg = SimConfig(n_requests=120, mean_interarrival=1.5, seed=11,
+                    straggler_mode=mode, **REGIMES[regime])
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous")
+    recs = sorted(eng.run(reqs), key=lambda r: r.rid)
+
+    assert len(recs) == cfg.n_requests
+    assert [r.arm for r in recs] == golden["arms"]
+    # float.hex() is exact — one flipped mantissa bit fails the compare
+    assert [float(r.t_total).hex() for r in recs] == golden["t_total_hex"]
+    assert [float(r.wait_s).hex() for r in recs] == golden["wait_hex"]
+    assert eng.fault_counters.as_dict() == golden["faults"]
+    for rid_s, want in golden["span_structure"].items():
+        got = [list(x) for x in span_structure(eng.tracer, int(rid_s))]
+        assert got == want, f"span structure drifted for rid {rid_s}"
+
+
+# ---------------------------------------------------------------------------
+# heap (t, seq) tie-break property
+# ---------------------------------------------------------------------------
+
+
+def _check_tiebreak(seed: int) -> None:
+    """One randomized scenario: interleave eager pushes with a reserved
+    band whose push_at calls happen lazily in shuffled order, with heavy
+    timestamp collisions.  Pop order must equal the (t, seq) sort — i.e.
+    insertion order among equal timestamps, with reserved slots behaving
+    as if they had been pushed eagerly at reservation time."""
+    rng = random.Random(seed)
+    n_eager = rng.randint(0, 20)
+    n_band = rng.randint(1, 20)
+    # few distinct timestamps → many ties; include exact duplicates of 0.0
+    tpool = [0.0, 0.0, 1.0, 2.0, rng.choice([0.0, 1.0, 3.0])]
+
+    evq = EventQueue()
+    expected = []  # (t, seq, payload)
+
+    # a reserved band claimed up-front (the streaming-arrivals shape) ...
+    base = evq.reserve(n_band)
+    band = [(rng.choice(tpool), base + k, f"band{k}") for k in range(n_band)]
+    # ... and eager pushes that land *after* the band's seq range
+    for j in range(n_eager):
+        t = rng.choice(tpool)
+        evq.push(t, "eager", f"eager{j}")
+        expected.append((t, base + n_band + j, f"eager{j}"))
+    # lazy pushes of the band, in arbitrary order — must not matter
+    rng.shuffle(band)
+    for t, seq, payload in band:
+        evq.push_at(t, seq, "band", payload)
+        expected.append((t, seq, payload))
+
+    expected.sort(key=lambda x: (x[0], x[1]))
+    got = []
+    while len(evq):
+        t, kind, payload = evq.pop()
+        got.append(payload)
+    assert got == [p for _, _, p in expected], f"seed={seed}"
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_heap_tiebreak_survives_streaming(seed):
+        _check_tiebreak(seed)
+
+except ImportError:
+
+    @pytest.mark.parametrize("seed", range(200))
+    def test_heap_tiebreak_survives_streaming(seed):
+        _check_tiebreak(seed)
+
+
+def test_equal_time_pops_follow_insertion_order():
+    """The degenerate all-ties case, spelled out: N pushes at t=0 pop in
+    push order — the determinism the whole event loop leans on."""
+    evq = EventQueue()
+    for i in range(50):
+        evq.push(0.0, "e", i)
+    assert [evq.pop()[2] for _ in range(50)] == list(range(50))
