@@ -1,0 +1,164 @@
+"""Fleet-scale benchmark: federated LinUCB gossip vs isolated per-cluster
+learning, plus a router-policy comparison, on a mixed heavy workload.
+
+Three heterogeneous clusters (testbed, half-size, double-size
+inventories) serve one fleet-wide Poisson stream (μ = 1.0 s — the
+congested regime, heavier than any single cluster's capacity, so routing
+and backpressure both matter).  Every scheduler starts **cold** (no
+offline phase): the question is how fast the fleet prices its 11-arm
+action space.
+
+* **federated** — per-cluster ``FederatedRisePolicy`` instances whose
+  (A, b, counts) statistics merge every ``gossip_period_s`` simulated
+  seconds (``LinUCBFederation``): each cluster schedules with the union
+  of all clusters' observations, amortizing cold-start exploration
+  (including the forced-exploration minimum pulls, which key off the
+  *merged* counts) fleet-wide.
+* **isolated** — identical policies and workload, gossip disabled: every
+  cluster pays the full exploration cost alone.
+
+The headline metric is fleet cumulative reward (higher is better;
+``FleetResult.cumulative_reward``).  A secondary section compares the
+three router policies (least_loaded / locality / weighted) under
+isolated learning.
+
+Runs are deterministic (driver draws no randomness; policies are seeded)
+so the committed JSON is reproducible bit-for-bit:
+
+  PYTHONPATH=src:. python benchmarks/bench_fleet.py           # 600 req → results/bench_fleet.json
+  PYTHONPATH=src:. python benchmarks/bench_fleet.py --quick   # 200 req → results/bench_fleet_quick.json (CI gate)
+
+The quick mode is the CI gate (scripts/ci.sh): it asserts federated
+cumulative reward beats isolated AND matches the committed baseline JSON
+within 1e-6 relative tolerance.  Regenerate by re-running (the file is
+rewritten in place; a diff means behavior changed — treat it like a
+golden-file update and say why in the commit).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import Timer, save_json
+from repro.serving.engine import SimConfig, make_requests
+from repro.serving.fleet import (AutoscaleConfig, ClusterSpec, FederatedRisePolicy,
+                                 FleetConfig, FleetEngine)
+from repro.serving.workload import synthetic_quality_table
+
+HEAVY_MU = 1.0  # fleet-wide congested arrival regime (seconds)
+GOSSIP_PERIOD_S = 30.0
+MODES = {"quick": 200, "full": 600}
+
+#: heterogeneous fleet: testbed inventory, half-size, double-size
+CLUSTERS = (
+    ClusterSpec("edge-a", region="east"),
+    ClusterSpec(
+        "edge-b", region="west",
+        pool_replicas={"sdxl": 1, "ssd1b": 1, "vega": 1,
+                       "sd3l": 1, "sd3lt": 1, "sd3m": 1},
+    ),
+    ClusterSpec(
+        "edge-c", region="south",
+        pool_replicas={"sdxl": 4, "ssd1b": 4, "vega": 4,
+                       "sd3l": 4, "sd3lt": 4, "sd3m": 4},
+    ),
+)
+REGIONS = tuple(c.region for c in CLUSTERS)
+
+
+def region_of(req) -> str:
+    """Deterministic home region of a request (rid round-robin)."""
+    return REGIONS[req.rid % len(REGIONS)]
+
+
+def run_fleet(reqs, qt, cfg, *, gossip, router="least_loaded",
+              autoscale=False, seed=0):
+    """One fleet run → metrics dict (cold-start policies, deterministic)."""
+    fleet = FleetConfig(clusters=CLUSTERS, router=router,
+                        gossip_period_s=gossip)
+    pols = [
+        FederatedRisePolicy(seed=seed + 13 * k)
+        for k in range(fleet.n_clusters)
+    ]
+    eng = FleetEngine(
+        fleet, cfg, qt, pols,
+        autoscale=AutoscaleConfig() if autoscale else None,
+        region_of=region_of,
+    )
+    with Timer() as t:
+        res = eng.run(reqs)
+    waits = np.array([r.wait_s for r in res.records])
+    return {
+        "cumulative_reward": res.cumulative_reward(),
+        "mean_reward": float(np.mean([r.reward for r in res.records])),
+        "mean_latency_s": float(np.mean([r.t_total for r in res.records])),
+        "p95_wait_s": float(np.percentile(waits, 95)),
+        "n_records": len(res.records),
+        "n_gossips": res.n_gossips,
+        "assignments": list(np.bincount(
+            [res.assignments[r.rid] for r in res.records],
+            minlength=fleet.n_clusters,
+        ).tolist()),
+        "autoscale": [t.autoscale.as_dict() for t in res.telemetry],
+        "wall_s": t.dt,
+    }
+
+
+def run(mode: str = "full") -> dict:
+    n = MODES[mode]
+    cfg = SimConfig(n_requests=n, mean_interarrival=HEAVY_MU, seed=23)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs)
+
+    out = {"mode": mode, "n_requests": n, "mu_s": HEAVY_MU,
+           "gossip_period_s": GOSSIP_PERIOD_S}
+    out["federated"] = run_fleet(reqs, qt, cfg, gossip=GOSSIP_PERIOD_S)
+    out["isolated"] = run_fleet(reqs, qt, cfg, gossip=None)
+    out["federated_autoscaled"] = run_fleet(
+        reqs, qt, cfg, gossip=GOSSIP_PERIOD_S, autoscale=True
+    )
+    out["routers"] = {
+        r: run_fleet(reqs, qt, cfg, gossip=None, router=r)["cumulative_reward"]
+        for r in ("least_loaded", "locality", "weighted")
+    }
+
+    fed = out["federated"]["cumulative_reward"]
+    iso = out["isolated"]["cumulative_reward"]
+    out["federated_advantage"] = fed - iso
+    print(f"federated cumulative reward : {fed:+.3f}")
+    print(f"isolated  cumulative reward : {iso:+.3f}")
+    print(f"advantage                   : {fed - iso:+.3f}")
+    print(f"routers                     : {out['routers']}")
+    assert fed > iso, (
+        f"federated merge must beat isolated learning: {fed} <= {iso}"
+    )
+    return out
+
+
+def main(argv) -> None:
+    mode = "quick" if "--quick" in argv else "full"
+    out = run(mode)
+    name = "bench_fleet_quick" if mode == "quick" else "bench_fleet"
+
+    if mode == "quick":  # CI gate: match the committed baseline
+        import json
+        from benchmarks.common import RESULTS
+
+        path = RESULTS / f"{name}.json"
+        if path.exists():
+            base = json.loads(path.read_text())
+            for key in ("federated", "isolated"):
+                got = out[key]["cumulative_reward"]
+                want = base[key]["cumulative_reward"]
+                assert abs(got - want) <= 1e-6 * max(1.0, abs(want)), (
+                    f"{key} cumulative reward drifted from baseline: "
+                    f"{got} vs {want} — regenerate results/{name}.json "
+                    f"deliberately if the change is intended"
+                )
+            print("baseline match: OK")
+    print("saved:", save_json(name, out))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Internal-link checker for the docs tree.
+
+Scans markdown files (``docs/*.md`` plus the top-level ``README.md`` /
+``ROADMAP.md`` by default) for inline links ``[text](target)`` and
+verifies every *relative* target resolves to a real file or directory in
+the repo, relative to the file containing the link.  External links
+(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+skipped, as are targets that resolve *outside* the repo root (GitHub-web
+conventions like the ``../../actions/...`` CI badge); a ``path#anchor``
+target is checked for the path part only.
+
+Exit status 1 (listing every broken link) keeps the docs job in
+``scripts/ci.sh`` honest: a page that names a moved test or benchmark
+file fails CI instead of rotting.
+
+Usage: python scripts/check_docs_links.py [file-or-dir ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = ["docs", "README.md", "ROADMAP.md"]
+
+# inline markdown links, excluding images; lazy match keeps nested parens out
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files(targets) -> list:
+    """Expand file/dir arguments into a sorted list of markdown files."""
+    files = []
+    for t in targets:
+        p = (REPO / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+    return files
+
+
+def broken_links(md_file: Path) -> list:
+    """Return [(lineno, target)] for links in ``md_file`` that do not
+    resolve to an existing path."""
+    out = []
+    for lineno, line in enumerate(
+            md_file.read_text().splitlines(), start=1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md_file.parent / path_part).resolve()
+            if not resolved.is_relative_to(REPO):
+                continue  # GitHub-web-relative (e.g. the CI badge)
+            if not resolved.exists():
+                out.append((lineno, target))
+    return out
+
+
+def main(argv=None) -> int:
+    """CLI entry point; prints broken links and returns 1 if any."""
+    targets = (argv if argv else sys.argv[1:]) or DEFAULT_TARGETS
+    files = iter_md_files(targets)
+    if not files:
+        print(f"check_docs_links: no markdown files under {targets}")
+        return 1
+    n_links = 0
+    failures = 0
+    for f in files:
+        bad = broken_links(f)
+        n_links += sum(1 for line in f.read_text().splitlines()
+                       for _ in _LINK.finditer(line))
+        for lineno, target in bad:
+            rel = f.relative_to(REPO)
+            print(f"{rel}:{lineno}: broken link -> {target}")
+            failures += 1
+    if failures:
+        print(f"docs links: {failures} broken link(s)")
+        return 1
+    print(f"docs links: OK ({len(files)} files, {n_links} links checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

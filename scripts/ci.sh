@@ -2,8 +2,9 @@
 # CI gate: runtime parity + fast smoke first (hard gates), then — in full
 # mode — the e2e IR-path smoke (quickstart + tiny runtime/cascade bench
 # configs), the distributed-correctness suites, a traced observability
-# sweep (Chrome trace emission + schema validation) and the full tier-1
-# suite.
+# sweep (Chrome trace emission + schema validation), the event-loop and
+# fleet quick-bench gates (golden digest / committed-baseline asserts),
+# the docs job (docstring lint + link check) and the full tier-1 suite.
 #
 #   scripts/ci.sh          # parity + fast smoke + e2e + full tier-1
 #   scripts/ci.sh fast     # parity + fast smoke only (~3 min)
@@ -71,6 +72,20 @@ if [ "${1:-full}" = "full" ]; then
     # against the pre-refactor golden digest (tests/golden/), then emits
     # events/s — the fleet-scale vectorization number, tracked in README
     PYTHONPATH=".:$PYTHONPATH" python benchmarks/profile_event_loop.py --quick
+
+    echo "== fleet bench (quick gate: federated > isolated + baseline) =="
+    # 3-cluster fleet under mixed heavy traffic: asserts federated LinUCB
+    # beats isolated per-cluster learning on cumulative reward AND that
+    # the run matches the committed baseline results/bench_fleet_quick.json
+    # (the fleet reductions — 1-cluster bitwise identity, exact gossip
+    # merge — are tier-1 tests in tests/test_fleet.py)
+    PYTHONPATH=".:$PYTHONPATH" python benchmarks/bench_fleet.py --quick
+
+    echo "== docs job (docstring lint + internal link check) =="
+    # every public name in src/repro/serving/ carries a docstring, and
+    # every relative link in docs/ + README.md + ROADMAP.md resolves
+    python scripts/lint_docstrings.py
+    python scripts/check_docs_links.py
 
     echo "== full tier-1 suite (gate: no failures beyond the known baseline) =="
     out="$(mktemp)"

@@ -1,0 +1,83 @@
+"""Docstring lint for the public serving surface.
+
+Fails (exit 1, one line per offender) when a public name under
+``src/repro/serving/`` lacks a docstring.  Checked names:
+
+* module docstrings;
+* module-level public functions and classes;
+* public methods and properties of public classes.
+
+"Public" means not underscore-prefixed and not a dunder (``__init__``
+etc. are exempt — the class docstring carries the construction
+contract).  Nested functions are never checked (implementation detail).
+
+Run directly or via tests/test_docs_lint.py (the CI docs job):
+
+  python scripts/lint_docstrings.py            # lint src/repro/serving
+  python scripts/lint_docstrings.py <dir> ...  # lint other trees
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = [ROOT / "src" / "repro" / "serving"]
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _missing_in_class(node: ast.ClassDef, path: Path, offenders: list) -> None:
+    for item in node.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _is_public(item.name):
+            if ast.get_docstring(item) is None:
+                offenders.append(
+                    f"{path}:{item.lineno}: method "
+                    f"{node.name}.{item.name} lacks a docstring"
+                )
+
+
+def lint_file(path: Path) -> list:
+    """All undocumented public names of one module, as report lines."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    offenders: list = []
+    if ast.get_docstring(tree) is None:
+        offenders.append(f"{path}:1: module lacks a docstring")
+    for node in tree.body:  # module level only: nested defs are exempt
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name) and ast.get_docstring(node) is None:
+                offenders.append(
+                    f"{path}:{node.lineno}: function {node.name} "
+                    f"lacks a docstring"
+                )
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            if ast.get_docstring(node) is None:
+                offenders.append(
+                    f"{path}:{node.lineno}: class {node.name} "
+                    f"lacks a docstring"
+                )
+            _missing_in_class(node, path, offenders)
+    return offenders
+
+
+def main(argv) -> int:
+    targets = [Path(a) for a in argv] or DEFAULT_TARGETS
+    offenders: list = []
+    for target in targets:
+        for path in sorted(target.rglob("*.py")):
+            offenders.extend(lint_file(path))
+    for line in offenders:
+        print(line)
+    if offenders:
+        print(f"\n{len(offenders)} undocumented public name(s)")
+        return 1
+    print("docstring lint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -42,6 +42,11 @@ DEFAULT_CASCADES = (
 
 @dataclass(frozen=True)
 class Arm:
+    """One scheduler action: a relay-program template plus its action-
+    space index and display label.  The legacy two-hop views below
+    (``family``/``relay_step``/``edge_pool``/…) project the N-segment
+    program onto the quantities older call sites expect."""
+
     idx: int
     program: RelayProgram
     label: str
@@ -60,10 +65,12 @@ class Arm:
 
     @property
     def edge_pool(self) -> Optional[str]:
+        """Replica pool of the first (edge) segment; None if standalone."""
         return self.program.segments[0].pool if self.program.is_relay else None
 
     @property
     def device_pool(self) -> str:
+        """Replica pool of the final (device) segment."""
         return self.program.segments[-1].pool
 
     @property
@@ -76,6 +83,7 @@ class Arm:
 
     @property
     def n_hops(self) -> int:
+        """Number of inter-segment latent handoffs (0 for standalone)."""
         return self.program.n_hops
 
 

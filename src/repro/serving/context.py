@@ -69,6 +69,37 @@ def backlog_horizon(cfg) -> float:
     return cfg.max_queue * BACKLOG_SECONDS_PER_SLOT
 
 
+def pool_inventory(cfg) -> Dict[str, int]:
+    """Replica inventory of a SimConfig: pool name → replica count.
+
+    Defaults to the testbed's ``serving.arms.POOL_REPLICAS``;
+    ``cfg.pool_replicas`` overrides the *counts* per pool (the fleet's
+    heterogeneous-cluster seam) but must cover exactly the same pool set —
+    the context features (:data:`POOL_GROUPS`), the arm availability masks
+    and the vectorized pool snapshot all iterate the full pool list, so a
+    missing pool would silently skew every load feature.  Counts must be
+    ≥ 1 (``np.add.reduceat`` cannot represent an empty replica slice; model
+    a drained pool with autoscaling or failure injection instead).  Both
+    engines read their inventory through this one accessor, so a cluster's
+    pool sizing is decided in exactly one place."""
+    from repro.serving.arms import POOL_REPLICAS
+
+    override = getattr(cfg, "pool_replicas", None)
+    if override is None:
+        return dict(POOL_REPLICAS)
+    if set(override) != set(POOL_REPLICAS):
+        raise ValueError(
+            f"pool_replicas must cover exactly {sorted(POOL_REPLICAS)}; "
+            f"got {sorted(override)}"
+        )
+    bad = {p: n for p, n in override.items() if int(n) < 1}
+    if bad:
+        raise ValueError(f"pool_replicas counts must be >= 1: {bad}")
+    # preserve POOL_REPLICAS key order: the vectorized snapshot's reduceat
+    # segment layout (and hence float summation order) follows it
+    return {p: int(override[p]) for p in POOL_REPLICAS}
+
+
 def failure_schedule(cfg) -> Tuple[Tuple[str, int, float, float], ...]:
     """Normalized replica-outage schedule of a SimConfig.
 

@@ -25,11 +25,12 @@ from repro.core.policies import Policy
 from repro.core.program import phase_name
 from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
-from repro.serving.arms import ARMS, N_ARMS, POOL_REPLICAS, Arm, pools_used
+from repro.serving.arms import ARMS, N_ARMS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    failure_schedule, fallback_avail,
-                                   partition_stragglers, pool_key,
-                                   straggler_mode, telemetry_features)
+                                   partition_stragglers, pool_inventory,
+                                   pool_key, straggler_mode,
+                                   telemetry_features)
 from repro.serving.obs.tracer import SpanTracer
 from repro.serving.runtime.telemetry import FaultCounters
 from repro.serving.runtime.transport import HandoffTransport, TransportConfig
@@ -37,6 +38,14 @@ from repro.serving.runtime.transport import HandoffTransport, TransportConfig
 
 @dataclass
 class SimConfig:
+    """Workload + fault-injection knobs shared by both serving runtimes.
+
+    Times are seconds of *simulated* clock throughout.  A SimConfig plus a
+    seed fully determines a run: arrivals, straggler draws and service
+    jitter all derive from ``seed`` (see ``repro.serving.context`` for the
+    request-intrinsic draws), so identical configs replay bit-identically.
+    """
+
     n_requests: int = 300
     mean_interarrival: float = 9.0  # paper: Poisson with μ = 9 s
     seed: int = 0
@@ -53,9 +62,23 @@ class SimConfig:
     # append live runtime telemetry (queue depth, batch occupancy) to the
     # LinUCB context vector — size policies with serving.context.context_dim
     telemetry_context: bool = False
+    # per-pool replica counts overriding serving.arms.POOL_REPLICAS — the
+    # fleet's heterogeneous-cluster seam (serving.context.pool_inventory).
+    # None (the default) keeps the testbed inventory and the bit-identical
+    # single-cluster golden path.
+    pool_replicas: Optional[Dict[str, int]] = None
 
 
 def make_requests(cfg: SimConfig, seed0: int = 0) -> List[Request]:
+    """Draw the Poisson request stream of a SimConfig.
+
+    Deterministic in ``cfg.seed``: arrivals (exponential interarrivals of
+    mean ``cfg.mean_interarrival`` seconds), per-request complexity/RTT/
+    battery/preference draws and the ``wants_text`` flag all come from one
+    ``default_rng(cfg.seed)`` stream, so the same config always yields the
+    same workload.  ``seed0`` offsets the prompt seeds (quality-table
+    rows), letting train/test workloads share arrival statistics without
+    sharing prompts."""
     rng = np.random.default_rng(cfg.seed)
     t = 0.0
     out = []
@@ -84,8 +107,9 @@ class Pools:
     kill every replica of a pool; see :meth:`n_alive`)."""
 
     def __init__(self, cfg: SimConfig):
+        self.inventory = pool_inventory(cfg)
         self.free_at: Dict[str, List[float]] = {
-            p: [0.0] * n for p, n in POOL_REPLICAS.items()
+            p: [0.0] * n for p, n in self.inventory.items()
         }
         self.cfg = cfg
         self.schedule = failure_schedule(cfg)
@@ -101,15 +125,19 @@ class Pools:
         return reps
 
     def n_alive(self, pool: str, now: float) -> int:
+        """Replicas of ``pool`` not inside an injected outage at ``now``."""
         return len(self._replicas(pool, now))
 
     def occupancy(self, pool: str, now: float) -> float:
+        """Fraction of live replicas busy at ``now`` (1.0 for a dead pool)."""
         reps = self._replicas(pool, now)
         if not reps:
             return 1.0
         return float(np.mean([t > now for _, t in reps]))
 
     def backlog(self, pool: str, now: float) -> float:
+        """Seconds until the earliest live replica frees up (inf if the
+        pool has no live replicas) — the availability-mask signal."""
         reps = self._replicas(pool, now)
         if not reps:
             return np.inf
@@ -135,6 +163,13 @@ class Pools:
 
 @dataclass
 class Record:
+    """One served request's outcome — the currency every benchmark and
+    parity suite consumes.  ``t_total``/``wait_s`` are simulated seconds
+    (arrival → completion, and time beyond the zero-queue ideal); both
+    engines produce bit-compatible Records for identical workloads (the
+    differential parity and golden bit-identity suites compare their
+    exact float bits)."""
+
     rid: int
     arm: int
     reward: float
@@ -165,6 +200,13 @@ def score_and_update(policy, arm_idx: int, ctx: np.ndarray, quality: dict,
 
 
 class ServingEngine:
+    """Single-cluster serving front end: owns the policy, quality table and
+    SimConfig, and executes the workload on one of the two interchangeable
+    runtimes (continuous-batching by default, sequential as the explicit
+    paper-faithful fallback).  Deterministic in ``cfg.seed`` — see
+    :meth:`run`.  The fleet layer (``repro.serving.fleet``) composes one
+    runtime per cluster instead of going through this class."""
+
     def __init__(self, policy: Policy, quality_table, cfg: SimConfig,
                  executor=None, seed0: int = 0, dynamic_reward: bool = True,
                  runtime: str = "continuous", runtime_cfg=None,
@@ -217,11 +259,14 @@ class ServingEngine:
 
     @property
     def n_arms(self) -> int:
+        """Size of the engine's action space (arm histograms size to it)."""
         return len(self.arms)
 
     def _occupancies(self, pools: Pools, now: float) -> dict:
+        """Grouped occupancy features of every pool at ``now`` (the context
+        vector's three load dims; ``serving.context.aggregate_occupancy``)."""
         return aggregate_occupancy(
-            {p: pools.occupancy(p, now) for p in POOL_REPLICAS}
+            {p: pools.occupancy(p, now) for p in pools.inventory}
         )
 
     def _avail(self, pools: Pools, now: float) -> np.ndarray:
@@ -241,11 +286,19 @@ class ServingEngine:
             return None
         horizon = backlog_horizon(self.cfg)
         qd = float(np.mean([
-            min(pools.backlog(p, now), horizon) for p in POOL_REPLICAS
+            min(pools.backlog(p, now), horizon) for p in pools.inventory
         ])) / horizon
         return telemetry_features(qd, 1.0)
 
     def run(self, requests: List[Request]) -> List[Record]:
+        """Serve ``requests`` to completion; returns one Record each.
+
+        Fully deterministic for a given ``(cfg, requests, policy seed)``:
+        service jitter comes from ``default_rng(cfg.seed + 17)``, straggler
+        draws are request-intrinsic, and the continuous runtime's event
+        heap breaks time ties by insertion order.  Record order is
+        completion order under the continuous runtime and arrival order
+        under the sequential one — sort by ``rid`` to compare."""
         if self.runtime == "continuous":
             from repro.serving.runtime.engine import ContinuousRuntime
 
@@ -281,7 +334,7 @@ class ServingEngine:
                 # request would block until a recovery that may never come)
                 avail = fallback_avail(
                     self.arms,
-                    {p: pools.n_alive(p, now) for p in POOL_REPLICAS},
+                    {p: pools.n_alive(p, now) for p in pools.inventory},
                 )
             arm_idx = self.policy.select(ctx, avail)
             arm = self.arms[arm_idx]

@@ -34,6 +34,17 @@ def _donate_argnums():
 
 
 class Executor:
+    """Compiled relay-program runner with shape-keyed compile caches.
+
+    Segments, noise generators and latent handoff round-trips each jit
+    once per shape signature (family/role/guidance, latent shape, bucket
+    size), so serving any request mix costs a bounded number of XLA
+    compiles.  Determinism contract: generation is keyed by request
+    seeds (``PRNGKey(seed·7919 + arm.idx)``), so the same (seeds, arm)
+    pair always yields the same images, independent of batch
+    composition — the property the partial-batch re-execution path
+    (``generate_bucketed(..., subset=...)``) relies on."""
+
     def __init__(self, families: Dict[str, Family],
                  arms: Optional[Sequence[Arm]] = None):
         self.families = families
@@ -170,6 +181,9 @@ class Executor:
         return run(key_or_keys, cond, self._bounds(prog))
 
     def generate(self, arm: Arm, seeds: np.ndarray) -> np.ndarray:
+        """Run the arm's full program for a batch sharing one PRNG key
+        (keyed off ``seeds[0]``); returns the decoded images as a numpy
+        array.  Prefer :meth:`generate_bucketed` for serving paths."""
         family = arm.family or "XL"
         _, _, cond = synth.batch(seeds, family)
         key = jax.random.PRNGKey(int(seeds[0]) * 7919 + arm.idx)

@@ -1,0 +1,34 @@
+"""Fleet-scale serving: multi-cluster topology, workload routing,
+federated LinUCB gossip, and telemetry-driven replica autoscaling.
+
+The fleet layer composes N single-cluster stacks (each a
+``ContinuousRuntime`` with its own pools and scheduler policy) behind a
+deterministic front-end router, on one global simulated clock — see
+docs/ARCHITECTURE.md for the request lifecycle and
+benchmarks/bench_fleet.py for the federated-vs-isolated comparison.
+Single-cluster code paths are untouched: a fleet of one reproduces the
+standalone runtime bit-for-bit (tests/test_fleet.py).
+"""
+from .autoscale import AutoscaleConfig, ReplicaAutoscaler
+from .engine import FleetEngine, FleetResult
+from .federated import (FederatedRisePolicy, LinUCBFederation, add_states,
+                        centralized_reference, zero_state)
+from .router import WorkloadRouter, load_score
+from .topology import ROUTER_POLICIES, ClusterSpec, FleetConfig
+
+__all__ = [
+    "AutoscaleConfig",
+    "ReplicaAutoscaler",
+    "FleetEngine",
+    "FleetResult",
+    "FederatedRisePolicy",
+    "LinUCBFederation",
+    "add_states",
+    "centralized_reference",
+    "zero_state",
+    "WorkloadRouter",
+    "load_score",
+    "ROUTER_POLICIES",
+    "ClusterSpec",
+    "FleetConfig",
+]

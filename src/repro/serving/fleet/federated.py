@@ -1,0 +1,142 @@
+"""Federated LinUCB: periodic exact merge of per-cluster scheduler state.
+
+LinUCB's sufficient statistics are *additive*: every observation
+contributes an independent increment ``ΔA = ccᵀ + λI``, ``Δb = r·c``,
+``Δcounts = 1`` to its arm's slice, so the union of N clusters'
+observations is exactly the sum of their increments over a shared prior.
+Each :class:`FederatedRisePolicy` therefore accumulates a *delta* state —
+the same jitted ``linucb.update`` applied to a zero-initialized
+accumulator, so a delta is bitwise the sum of the cluster's increments
+(IEEE ``0 + x == x``) — and the :class:`LinUCBFederation` folds the
+deltas into a common base on each gossip tick:
+
+    merged = base (+) delta_0 (+) delta_1 (+) … (+) delta_{N-1}
+
+``take_delta`` zeroes the accumulator on read, so an increment is folded
+into the base exactly once — double-counting is structurally impossible
+(a second gossip with no new observations is a no-op, bit for bit).
+With at most one observation per cluster per gossip round the merged
+state is *bitwise equal* to a centralized policy fed the union of
+observations in round-major / cluster-index order; with more, float
+non-associativity makes it equal only up to summation order
+(tests/test_fleet.py asserts both).
+
+This is the cold-start amortization the fleet gets "for free": every
+cluster prices an (arm, context) pair after *any* cluster has tried it.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linucb
+from repro.core.linucb import LinUCBState
+from repro.core.policies import RisePolicy
+
+
+def zero_state(n_arms: int, d: int) -> LinUCBState:
+    """All-zeros LinUCB accumulator (note: NOT ``init_state``, whose A
+    carries the identity prior — a delta must hold increments only, so
+    folding it onto a base never re-adds the prior)."""
+    return LinUCBState(
+        A=jnp.zeros((n_arms, d, d), jnp.float32),
+        b=jnp.zeros((n_arms, d), jnp.float32),
+        counts=jnp.zeros((n_arms,), jnp.float32),
+    )
+
+
+def add_states(a: LinUCBState, b: LinUCBState) -> LinUCBState:
+    """Elementwise sum of two LinUCB states (the federation fold step)."""
+    return LinUCBState(A=a.A + b.A, b=a.b + b.b, counts=a.counts + b.counts)
+
+
+class FederatedRisePolicy(RisePolicy):
+    """RisePolicy that mirrors every update into a delta accumulator.
+
+    ``select``/``update`` behave exactly like :class:`RisePolicy` (same
+    jitted kernels, same RNG stream for a given seed); additionally each
+    ``update`` applies the identical ``linucb.update`` to ``self.delta``,
+    a zero-initialized state, so the delta is bitwise the sum of this
+    cluster's increments since the last :meth:`take_delta`."""
+
+    name = "RISE-fed"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._ctx_dim = int(self.state.b.shape[1])
+        self.delta = zero_state(len(self.arms), self._ctx_dim)
+
+    def update(self, ctx, arm, reward):
+        """One observation: updates live state AND the gossip delta with
+        the same jitted kernel (so both see identical increments)."""
+        super().update(ctx, arm, reward)
+        self.delta = self._update(
+            self.delta, jnp.int32(arm), jnp.asarray(self._ctx(ctx)),
+            jnp.float32(reward),
+        )
+
+    def take_delta(self) -> LinUCBState:
+        """Return the accumulated delta and zero it — each increment can
+        therefore be folded into the federation base exactly once."""
+        d = self.delta
+        self.delta = zero_state(len(self.arms), self._ctx_dim)
+        return d
+
+
+class LinUCBFederation:
+    """Gossip coordinator over N :class:`FederatedRisePolicy` instances.
+
+    All member policies must start from the same initial state (the
+    shared prior becomes the federation ``base``).  :meth:`gossip` pulls
+    every cluster's delta (zeroing it), folds them onto the base in
+    cluster-index order, and installs the merged state everywhere — after
+    which every cluster schedules with the union of all observations."""
+
+    def __init__(self, policies: Sequence[FederatedRisePolicy]):
+        self.policies: List[FederatedRisePolicy] = list(policies)
+        if not self.policies:
+            raise ValueError("federation needs at least one policy")
+        base = self.policies[0].state
+        for p in self.policies[1:]:
+            if not all(
+                np.array_equal(np.asarray(x), np.asarray(y))
+                for x, y in zip(base, p.state)
+            ):
+                raise ValueError(
+                    "federated policies must start from identical state "
+                    "(same ctx_dim, arms and prior)"
+                )
+        self.base = base
+        self.n_gossips = 0
+
+    def gossip(self) -> LinUCBState:
+        """One merge round: fold every cluster's delta onto the base (in
+        cluster-index order — the documented, deterministic summation
+        order) and install the result as every cluster's live state and
+        as the new base.  Returns the merged state."""
+        merged = self.base
+        for p in self.policies:
+            merged = add_states(merged, p.take_delta())
+        self.base = merged
+        for p in self.policies:
+            p.state = merged
+        self.n_gossips += 1
+        return merged
+
+
+def centralized_reference(observations, n_arms: int, d: int,
+                          params: Optional[linucb.LinUCBParams] = None
+                          ) -> LinUCBState:
+    """Single-policy reference: apply ``(arm, ctx, reward)`` observations
+    in sequence to one fresh state — what the federation's merged state
+    is compared against (tests/test_fleet.py's merge-math property)."""
+    p = params or linucb.LinUCBParams()
+    st = linucb.init_state(n_arms, d)
+    for arm, ctx, reward in observations:
+        st = linucb.update(
+            st, jnp.int32(arm), jnp.asarray(ctx, jnp.float32),
+            jnp.float32(reward), p,
+        )
+    return st

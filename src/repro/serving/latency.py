@@ -74,18 +74,22 @@ class LatencyBreakdown:
 
     @property
     def edge_s(self) -> float:
+        """First-segment denoise seconds (0.0 for standalone arms)."""
         return self.segment_s[0] if len(self.segment_s) > 1 else 0.0
 
     @property
     def device_s(self) -> float:
+        """Final-segment denoise seconds."""
         return self.segment_s[-1]
 
     @property
     def transfer_s(self) -> float:
+        """Total latent-handoff wire+RTT seconds across all hops."""
         return sum(self.hop_s)
 
     @property
     def total(self) -> float:
+        """End-to-end seconds: every segment plus every hop."""
         return sum(self.segment_s) + sum(self.hop_s)
 
 
@@ -103,6 +107,9 @@ def wire_seconds(family: Optional[str], bw_mbps: float = 20.0,
 
 def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
                   compressed: bool = False) -> float:
+    """Seconds for one latent handoff: per-request RTT plus the
+    family-sized serialization term (:func:`wire_seconds`); 0.0 for
+    standalone arms (no hop)."""
     if family is None:
         return 0.0
     return rtt_ms / 1000.0 + wire_seconds(family, bw_mbps, compressed)
@@ -190,8 +197,10 @@ def reissue_latency(nominal_s: float, reissue: float) -> float:
 
 
 def full_model_latency(pool: str) -> float:
+    """Seconds for a full standalone denoise on ``pool`` (all T steps)."""
     return STEP_COST[pool] * T_FULL[pool]
 
 
 def arm_vram(arm: Arm) -> float:
+    """Peak VRAM bytes of the arm's program (max over its segments)."""
     return program_vram(arm.program)

@@ -30,6 +30,10 @@ def _feat(x: np.ndarray) -> np.ndarray:
 
 
 def quality_metrics(x_gen: np.ndarray, prompt: synth.Prompt) -> Dict[str, float]:
+    """Paper Table IV quality proxies of a generated image against its
+    prompt's reference render: CLIP-like cosine ("clip"), ImageReward-like
+    reconstruction score ("ir"), PickScore-like ("pick") and an aesthetic
+    term ("aes") — all dimensionless, deterministic in (image, prompt)."""
     target = synth.render(prompt)
     clip = float(np.clip(_feat(x_gen) @ _feat(target), -1, 1))
 

@@ -100,6 +100,8 @@ def to_chrome_trace(tracer: SpanTracer,
 
 def write_chrome_trace(tracer: SpanTracer, path: str,
                        meta: Optional[dict] = None) -> dict:
+    """Serialize :func:`to_chrome_trace` to ``path`` (open the file at
+    chrome://tracing or https://ui.perfetto.dev); returns the trace dict."""
     trace = to_chrome_trace(tracer, meta)
     with open(path, "w") as f:
         json.dump(trace, f)

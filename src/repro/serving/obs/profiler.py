@@ -38,9 +38,12 @@ class EventLoopProfiler:
     # engine-facing hooks -------------------------------------------------
 
     def start(self) -> None:
+        """Mark the loop's wall-clock start (perf_counter)."""
         self.t_start = time.perf_counter()
 
     def record(self, kind: str, wall_s: float) -> None:
+        """Account one handled event of ``kind`` costing ``wall_s``
+        wall seconds."""
         self.counts[kind] = self.counts.get(kind, 0) + 1
         self.wall_s[kind] = self.wall_s.get(kind, 0.0) + wall_s
 
@@ -52,6 +55,8 @@ class EventLoopProfiler:
         self.stale[kind] = self.stale.get(kind, 0) + 1
 
     def stop(self, evq=None) -> None:
+        """Mark the loop's wall-clock end and capture the event queue's
+        heap-op counters (pushes/pops/peak size) if one is given."""
         self.t_stop = time.perf_counter()
         if evq is not None:
             self.heap = {
@@ -64,10 +69,13 @@ class EventLoopProfiler:
 
     @property
     def n_events(self) -> int:
+        """Total handled events (stale pops counted separately)."""
         return sum(self.counts.values())
 
     @property
     def loop_wall_s(self) -> float:
+        """Wall seconds between :meth:`start` and :meth:`stop` (0.0 if
+        the loop never ran)."""
         if self.t_start is None or self.t_stop is None:
             return 0.0
         return self.t_stop - self.t_start

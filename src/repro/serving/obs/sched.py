@@ -40,6 +40,7 @@ class SchedulerIntrospection:
         self._arms: List[int] = []
 
     def record(self, arm: int, reward: float) -> None:
+        """Account one scheduling decision and its realized reward."""
         self.pulls[arm] += 1
         self.reward_sum[arm] += reward
         self._arms.append(arm)
@@ -48,16 +49,19 @@ class SchedulerIntrospection:
     @classmethod
     def from_records(cls, records: Sequence, n_arms: int
                      ) -> "SchedulerIntrospection":
+        """Build from a finished run's Records (replayed in rid order)."""
         intro = cls(n_arms)
         for r in sorted(records, key=lambda r: r.rid):
             intro.record(r.arm, r.reward)
         return intro
 
     def reward_means(self) -> np.ndarray:
+        """Per-arm mean realized reward (0-pull arms read 0)."""
         return self.reward_sum / np.maximum(self.pulls, 1)
 
     @property
     def best_arm(self) -> int:
+        """Hindsight-best arm: highest mean reward among pulled arms."""
         means = np.where(self.pulls > 0, self.reward_means(), -np.inf)
         return int(np.argmax(means))
 
@@ -80,6 +84,8 @@ class SchedulerIntrospection:
         return [[int(i + 1), float(curve[i])] for i in idx]
 
     def summary(self, labels: Optional[Sequence[str]] = None) -> dict:
+        """JSON-ready digest: per-arm pulls/means plus run-level regret
+        (``labels`` attaches arm display names)."""
         means = self.reward_means()
         per_arm = []
         for a in range(self.n_arms):

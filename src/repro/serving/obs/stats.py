@@ -45,6 +45,7 @@ class StreamingMoments:
         self.mx = -np.inf
 
     def add(self, x: float) -> None:
+        """Fold one sample into the running count/total/min/max."""
         self.n += 1
         self.total += x
         if x < self.mn:
@@ -54,14 +55,17 @@ class StreamingMoments:
 
     @property
     def mean(self) -> float:
+        """Running mean (0.0 before any sample)."""
         return self.total / self.n if self.n else 0.0
 
     @property
     def max(self) -> float:
+        """Largest sample seen (0.0 before any sample)."""
         return self.mx if self.n else 0.0
 
     @property
     def min(self) -> float:
+        """Smallest sample seen (0.0 before any sample)."""
         return self.mn if self.n else 0.0
 
 
@@ -80,6 +84,7 @@ class ReservoirSample:
         self.n_seen = 0
 
     def add(self, x: float) -> None:
+        """Offer one sample (kept with probability capacity/n_seen)."""
         if self.n_seen < self.capacity:
             self._buf[self.n_seen] = x
         else:
@@ -89,14 +94,17 @@ class ReservoirSample:
         self.n_seen += 1
 
     def values(self) -> np.ndarray:
+        """The currently retained samples (≤ capacity, unordered)."""
         return self._buf[: min(self.n_seen, self.capacity)]
 
     def quantile(self, q: float) -> float:
+        """Estimated q-quantile from the reservoir (0.0 when empty)."""
         v = self.values()
         return float(np.quantile(v, q)) if v.size else 0.0
 
     @property
     def nbytes(self) -> int:
+        """Fixed buffer footprint in bytes (capacity × 8)."""
         return self._buf.nbytes
 
 
@@ -109,14 +117,17 @@ class StreamingQuantiles:
         self.reservoir = ReservoirSample(capacity, seed)
 
     def add(self, x: float) -> None:
+        """Fold one sample into both the moments and the reservoir."""
         self.moments.add(x)
         self.reservoir.add(x)
 
     @property
     def n(self) -> int:
+        """Samples seen (exact, regardless of reservoir capacity)."""
         return self.moments.n
 
     def summary(self) -> Dict[str, float]:
+        """JSON-ready digest: exact count/mean/min/max + p50/p95/p99."""
         return {
             "count": self.moments.n,
             "mean": self.moments.mean,
@@ -136,26 +147,32 @@ class DepthSeries:
         self._q = StreamingQuantiles(capacity, seed)
 
     def add(self, t: float, depth: int) -> None:
-        # t is accepted for API symmetry with the old (t, depth) samples;
-        # only the depth distribution is retained
+        """Sample the queue depth at simulated time ``t`` (t is accepted
+        for API symmetry with the old (t, depth) samples; only the depth
+        distribution is retained)."""
         self._q.add(float(depth))
 
     @property
     def n(self) -> int:
+        """Depth samples recorded."""
         return self._q.n
 
     @property
     def mean(self) -> float:
+        """Exact mean queue depth over all samples."""
         return self._q.moments.mean
 
     @property
     def max(self) -> int:
+        """Exact maximum queue depth observed."""
         return int(self._q.moments.max)
 
     def p95(self) -> float:
+        """Reservoir-estimated 95th-percentile depth."""
         return self._q.reservoir.quantile(0.95)
 
     def summary(self) -> Dict[str, float]:
+        """JSON-ready digest (see StreamingQuantiles.summary)."""
         return self._q.summary()
 
 

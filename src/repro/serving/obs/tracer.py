@@ -51,9 +51,11 @@ class Span:
 
     @property
     def dur(self) -> float:
+        """Span duration in simulated seconds (0.0 for markers)."""
         return self.t1 - self.t0
 
     def as_dict(self) -> dict:
+        """JSON-ready form (pool/meta omitted when empty)."""
         d = {"rid": self.rid, "name": self.name, "kind": self.kind,
              "t0": self.t0, "t1": self.t1}
         if self.pool is not None:
@@ -76,10 +78,12 @@ class RequestTrace:
 
     @property
     def complete(self) -> bool:
+        """Whether the request has finished (its ``done`` stamp is set)."""
         return self.done is not None
 
     @property
     def t_total(self) -> Optional[float]:
+        """Arrival-to-completion simulated seconds (None while open)."""
         return None if self.done is None else self.done - self.arrival
 
     def attributed_s(self) -> float:
@@ -107,6 +111,7 @@ class SpanTracer:
 
     def start_request(self, rid: int, t: float, arm_idx: int,
                       arm_label: Optional[str] = None) -> None:
+        """Open a request's trace envelope at decision time ``t``."""
         self.requests[rid] = RequestTrace(rid, t, arm_idx, arm_label)
 
     def enqueue(self, rid: int, seg_name: str, t: float) -> None:
@@ -126,6 +131,7 @@ class SpanTracer:
                                    dict(meta))
 
     def end_segment(self, rid: int, t: float, **meta) -> None:
+        """Close the open service span at ``t`` (no-op if none open)."""
         s = self._open_seg.pop(rid, None)
         if s is not None:
             s.t1 = t
@@ -134,6 +140,8 @@ class SpanTracer:
 
     def hop(self, rid: int, hop_idx: int, t0: float, t1: float,
             nbytes: int, compressed: bool, pool: Optional[str] = None) -> None:
+        """Record one latent handoff: wire window [t0, t1] and payload
+        bytes, attributed to the sending pool."""
         self.requests[rid].spans.append(Span(
             rid, f"hop{hop_idx}", HOP, t0, t1, pool,
             {"bytes": nbytes, "compressed": compressed},
@@ -147,6 +155,7 @@ class SpanTracer:
         ))
 
     def end_request(self, rid: int, t: float) -> None:
+        """Stamp the request complete at simulated time ``t``."""
         self.requests[rid].done = t
 
     # ------------------------------------------------------------------
@@ -157,9 +166,12 @@ class SpanTracer:
         return len(self.requests)
 
     def completed(self) -> List[RequestTrace]:
+        """Traces of requests that finished (envelope closed)."""
         return [r for r in self.requests.values() if r.complete]
 
     def spans(self) -> Iterable[Span]:
+        """Every recorded span across all requests (iteration order:
+        request insertion, then span append order)."""
         for tr in self.requests.values():
             yield from tr.spans
 

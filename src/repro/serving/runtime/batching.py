@@ -38,6 +38,7 @@ class BatchKey:
 
 
 def batch_key_for(item: WorkItem) -> BatchKey:
+    """The :class:`BatchKey` a work item coalesces under."""
     return BatchKey(item.pool, item.arm_idx, item.phase)
 
 
@@ -66,6 +67,7 @@ class MicroBatchAggregator:
         self._pending_steps = 0
 
     def push(self, item: WorkItem, now: float) -> None:
+        """Enqueue one work item (stamping its ``enqueue_t`` to ``now``)."""
         item.enqueue_t = now
         key = batch_key_for(item)
         if key.pool != self.pool:
@@ -75,6 +77,7 @@ class MicroBatchAggregator:
         self._pending_steps += item.steps
 
     def depth(self) -> int:
+        """Total queued items across all keys (O(1))."""
         return self._depth
 
     def pending_steps(self) -> int:

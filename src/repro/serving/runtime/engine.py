@@ -83,17 +83,18 @@ import numpy as np
 from repro.core.context import Request, context_vector
 from repro.core.program import phase_name
 from repro.serving import latency as lat
-from repro.serving.arms import ARMS, POOL_REPLICAS, Arm, pools_used
+from repro.serving.arms import ARMS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
                                    failure_schedule, fallback_avail,
-                                   partition_stragglers, pool_key,
-                                   straggler_mode, telemetry_features)
+                                   partition_stragglers, pool_inventory,
+                                   pool_key, straggler_mode,
+                                   telemetry_features)
 from repro.serving.obs.tracer import SpanTracer
 
 from .batching import DEFAULT_BUCKETS, MicroBatchAggregator, bucketize
-from .events import (ARRIVE, BATCH_DONE, DEVICE_READY, FLUSH, REPLICA_FAIL,
-                     REPLICA_RECOVER, STRAGGLER, STRAGGLER_PARTIAL,
-                     EventQueue, WorkItem)
+from .events import (ARRIVE, AUTOSCALE, BATCH_DONE, DEVICE_READY, FLUSH,
+                     REPLICA_FAIL, REPLICA_RECOVER, STRAGGLER,
+                     STRAGGLER_PARTIAL, EventQueue, WorkItem)
 from .telemetry import RuntimeTelemetry
 from .transport import HandoffTransport
 
@@ -106,6 +107,16 @@ ARRIVAL_WINDOW = 256
 
 @dataclass
 class RuntimeConfig:
+    """Continuous-runtime knobs: micro-batching, transport, observability.
+
+    Every field has a bit-identity-preserving default — a default-
+    constructed RuntimeConfig reproduces the golden record stream exactly
+    (``tests/golden/``).  ``autoscaler`` (None by default) attaches a
+    ``repro.serving.fleet.autoscale.ReplicaAutoscaler``: the runtime then
+    fires AUTOSCALE evaluation ticks that may emit the ordinary
+    REPLICA_FAIL / REPLICA_RECOVER pool-membership events.  Times are
+    simulated seconds, bandwidth is Mbit/s."""
+
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     linger_s: float = 0.25  # max wait for batch companions
     batch_cost_growth: float = 0.3  # t(b) = t1·(1 + growth·(b−1))
@@ -118,6 +129,9 @@ class RuntimeConfig:
     # optional obs.profiler.EventLoopProfiler wall-clock hooks around the
     # event-loop handler dispatch (the fleet-scale vectorization baseline)
     profiler: Optional[object] = None
+    # optional fleet.autoscale.ReplicaAutoscaler: telemetry-driven replica
+    # scale-up/down via the existing REPLICA_FAIL/RECOVER event machinery
+    autoscaler: Optional[object] = None
 
 
 @dataclass
@@ -132,8 +146,14 @@ class _PoolState:
     flush_gen: int = 0
     failed: Set[int] = field(default_factory=set)  # injected outages
 
+    # replicas parked by the autoscaler (a subset of ``failed``): a
+    # scale-down adds here AND to failed — the pool drains it exactly like
+    # an outage — and only members of this set are scale-up candidates
+    scaled_down: Set[int] = field(default_factory=set)
+
     @property
     def n_alive(self) -> int:
+        """Replicas currently in the pool (not failed, not scaled down)."""
         return self.n - len(self.failed)
 
 
@@ -293,16 +313,20 @@ class ContinuousRuntime:
     def _setup_pools(self) -> None:
         """Array-backed pool state: one runtime-wide ``busy_until`` float
         array and one failure mask, with each pool's view sliced out (so
-        per-replica writes and the vectorized snapshot share storage)."""
-        names = list(POOL_REPLICAS)
-        total = sum(POOL_REPLICAS.values())
+        per-replica writes and the vectorized snapshot share storage).
+        Replica counts come from ``serving.context.pool_inventory`` — the
+        testbed's POOL_REPLICAS unless ``cfg.pool_replicas`` overrides them
+        (the fleet's heterogeneous-cluster seam)."""
+        inventory = self.inventory = pool_inventory(self.cfg)
+        names = list(inventory)
+        total = sum(inventory.values())
         self._busy_all = np.zeros(total)
         self._failed_all = np.zeros(total, bool)
         self.pools = {}
         starts = []
         off = 0
         for p in names:
-            n = POOL_REPLICAS[p]
+            n = inventory[p]
             starts.append(off)
             self.pools[p] = _PoolState(
                 n=n, free=list(range(n)),
@@ -366,6 +390,22 @@ class ContinuousRuntime:
                 self._arm_pool_mat[i, pool_j[p]] = True
 
     def run(self, requests: List[Request]):
+        """Serve ``requests`` to completion; returns completion-ordered
+        ``Record`` objects (times in simulated seconds).  Exactly
+        :meth:`begin` followed by :meth:`_drain` — the split exists so the
+        fleet driver (``repro.serving.fleet``) can interleave several
+        clusters event-by-event on one global clock; the loop bodies are
+        shared, so draining here or via repeated :meth:`step` calls yields
+        bit-identical records, fault counters and spans."""
+        self.begin(requests)
+        self._drain()
+        return self.records
+
+    def begin(self, requests: List[Request]) -> None:
+        """Initialize pool/arm state and seed the event queue WITHOUT
+        draining it — the stepping entry point.  Seeds the failure
+        schedule and the streaming-arrival window; further requests may
+        arrive later via :meth:`inject` (the fleet router path)."""
         from repro.serving.engine import Record, score_and_update
 
         self._Record, self._score = Record, score_and_update
@@ -389,8 +429,14 @@ class ContinuousRuntime:
                 evq.push(t_recover, REPLICA_RECOVER, (pool, idx))
         for _ in range(min(ARRIVAL_WINDOW, len(arrivals))):
             self._push_next_arrival()
+        self._autoscale_armed = False
+        if self.rt.autoscaler is not None and arrivals:
+            self.ensure_autoscale(arrivals[0].arrival)
 
-        pools = self.pools
+    def _drain(self) -> None:
+        """Pop-and-handle until the event queue empties — the single-
+        cluster hot loop (stale superseded FLUSH events drop on pop)."""
+        evq, pools = self.evq, self.pools
         prof = self.rt.profiler
         if prof is None:
             while evq:
@@ -411,7 +457,68 @@ class ContinuousRuntime:
                 self._handle(kind, payload, now)
                 prof.record(kind, perf_counter() - t0)
             prof.stop(evq)
-        return self.records
+
+    # ------------------------------------------------------------------
+    # stepping interface (fleet driver)
+    # ------------------------------------------------------------------
+
+    def peek_time(self) -> Optional[float]:
+        """Simulated timestamp (seconds) of this cluster's earliest queued
+        event, or None when drained — what the fleet driver merges across
+        clusters to find the globally next event."""
+        heap = self.evq._heap
+        return heap[0][0] if heap else None
+
+    def step(self) -> Optional[float]:
+        """Pop and handle exactly one event; returns its timestamp (None
+        when the queue is empty).  A stale superseded FLUSH pops as a
+        no-op, exactly as :meth:`_drain` drops it.  ``rt.profiler`` is not
+        consulted on this path — fleet stepping is not the profiled
+        single-cluster loop."""
+        evq = self.evq
+        if not evq:
+            return None
+        now, kind, payload = evq.pop()
+        if kind == FLUSH and payload[1] != self.pools[payload[0]].flush_gen:
+            return now
+        self._handle(kind, payload, now)
+        return now
+
+    def inject(self, req: Request, t: Optional[float] = None) -> None:
+        """Feed one routed request into the running simulation at time
+        ``t`` (simulated seconds; defaults to ``req.arrival``) — the fleet
+        router's admission path.  Unlike the pre-reserved streaming band
+        of :meth:`begin`, injected arrivals take fresh heap seqs, so
+        same-timestamp ties break after already-queued events."""
+        t_arr = req.arrival if t is None else t
+        self.evq.push(t_arr, ARRIVE, req)
+        if self.rt.autoscaler is not None:
+            self.ensure_autoscale(t_arr)
+
+    def idle(self) -> bool:
+        """True when nothing is queued or in flight — this cluster does no
+        further work unless a request is injected."""
+        return not self.evq and not self.pending
+
+    def load_snapshot(self, now: float) -> Dict[str, object]:
+        """Router-facing load view of this cluster at ``now``: grouped
+        occupancy (the context-vector load features, from the cached
+        vectorized snapshot), per-pool backlog seconds, queued/in-flight
+        request counts, live-replica capacity and the fraction of arms the
+        backlog horizon leaves available.  Read-only — computing it never
+        perturbs the simulation (the snapshot caches on ``(now, state
+        version)``), so routing cannot break bit-identity."""
+        occ, avail = self._snapshot(now)
+        return {
+            "occupancy": dict(occ),
+            "avail_frac": float(np.mean(avail)),
+            "backlog_s": {
+                p: float(self._backlog(st, now)) for p, st in self._pool_list
+            },
+            "queued": int(sum(st.agg.depth() for st in self.pools.values())),
+            "inflight": len(self.pending),
+            "capacity": int(sum(st.n_alive for st in self.pools.values())),
+        }
 
     def _push_next_arrival(self) -> None:
         k = self._next_arrival
@@ -437,6 +544,8 @@ class ContinuousRuntime:
             self._on_replica_fail(*payload, now=now)
         elif kind == REPLICA_RECOVER:
             self._on_replica_recover(*payload, now=now)
+        elif kind == AUTOSCALE:
+            self._on_autoscale(now)
 
     # ------------------------------------------------------------------
 
@@ -664,25 +773,95 @@ class ContinuousRuntime:
         self.evq.push(done, BATCH_DONE, (bid, 0))
 
     def _on_replica_fail(self, pool: str, idx: int, t_recover: float,
-                         now: float) -> None:
-        """Injected outage: the replica accepts no new batches (in-flight
-        work finishes); the pool fails over to its surviving replicas."""
+                         autoscale: bool = False, *, now: float) -> None:
+        """Remove a replica from service: the replica accepts no new
+        batches (in-flight work finishes); the pool fails over to its
+        surviving replicas.  ``autoscale=True`` marks an autoscaler
+        scale-down rather than an injected outage — the replica parks in
+        ``scaled_down`` (the scale-up candidate set) and the action counts
+        in the autoscale counters, never in the fault counters (whose
+        exact dicts the golden/parity suites compare)."""
         st = self.pools[pool]
         self._ver += 1
         st.failed.add(idx)
         self._failed_all[self._pool_base[pool] + idx] = True
         if idx in st.free:
             st.free.remove(idx)
-        self.telemetry.record_failure(pool, recovers=bool(np.isfinite(t_recover)))
+        if autoscale:
+            st.scaled_down.add(idx)
+            self.telemetry.record_scale(pool, up=False)
+        else:
+            self.telemetry.record_failure(
+                pool, recovers=bool(np.isfinite(t_recover))
+            )
 
-    def _on_replica_recover(self, pool: str, idx: int, now: float) -> None:
+    def _on_replica_recover(self, pool: str, idx: int,
+                            autoscale: bool = False, *, now: float) -> None:
+        """Return a replica to service (outage recovery, or an autoscaler
+        scale-up un-parking a ``scaled_down`` replica) and kick a dispatch
+        pass so queued work claims it immediately."""
         st = self.pools[pool]
         self._ver += 1
         st.failed.discard(idx)
+        st.scaled_down.discard(idx)
         self._failed_all[self._pool_base[pool] + idx] = False
+        if autoscale:
+            self.telemetry.record_scale(pool, up=True)
         if st.busy_until[idx] <= now and idx not in st.free:
             st.free.append(idx)
         self._dispatch(pool, now)
+
+    # ------------------------------------------------------------------
+    # autoscaling (repro.serving.fleet.autoscale)
+    # ------------------------------------------------------------------
+
+    def ensure_autoscale(self, now: float) -> None:
+        """Arm the next AUTOSCALE evaluation tick (one live tick at a
+        time) ``interval_s`` seconds from ``now``; no-op without an
+        attached autoscaler or with a tick already pending."""
+        sc = self.rt.autoscaler
+        if sc is None or self._autoscale_armed:
+            return
+        self._autoscale_armed = True
+        self.evq.push(now + sc.cfg.interval_s, AUTOSCALE, None)
+
+    def _on_autoscale(self, now: float) -> None:
+        """Evaluate the autoscaling policy over per-pool telemetry and
+        apply its decisions through the ordinary pool-membership events: a
+        scale-down pushes REPLICA_FAIL (the replica drains exactly like an
+        outage — in-flight work finishes, no new batches), a scale-up
+        pushes REPLICA_RECOVER for a parked replica.  Scale-down prefers a
+        free replica (highest index), else the highest-index live one;
+        scale-up revives the lowest-index parked replica — both
+        deterministic, so runs are reproducible.  The tick re-arms only
+        while work remains, so the event loop still terminates."""
+        self._autoscale_armed = False
+        sc = self.rt.autoscaler
+        views: Dict[str, Dict[str, float]] = {}
+        for p, st in self._pool_list:
+            views[p] = {
+                "n_alive": st.n_alive,
+                "n_parked": len(st.scaled_down),
+                "n_total": st.n,
+                "depth": st.agg.depth(),
+                "backlog_s": float(self._backlog(st, now)),
+                "occupancy": float(self._occ_pool(st, now)),
+            }
+        self.telemetry.record_autoscale_tick()
+        for pool, delta in sc.decide(now, views):
+            st = self.pools[pool]
+            if delta > 0:
+                parked = sorted(st.scaled_down)
+                if parked:
+                    self.evq.push(now, REPLICA_RECOVER, (pool, parked[0], True))
+            elif delta < 0 and st.n_alive > 0:
+                alive = [i for i in range(st.n) if i not in st.failed]
+                free_alive = [i for i in alive if i in st.free]
+                idx = max(free_alive) if free_alive else max(alive)
+                self.evq.push(now, REPLICA_FAIL, (pool, idx, np.inf, True))
+        if (self.pending or self._next_arrival < len(self._arrivals)
+                or any(st.agg.depth() for _, st in self._pool_list)):
+            self.ensure_autoscale(now)
 
     # ------------------------------------------------------------------
 

@@ -34,6 +34,12 @@ REPLICA_FAIL = "replica_fail"
 REPLICA_RECOVER = "replica_recover"
 STRAGGLER = "straggler"
 STRAGGLER_PARTIAL = "straggler_partial"
+# autoscaler evaluation tick (payload: None): the attached
+# fleet.autoscale policy inspects per-pool queue depth / backlog /
+# occupancy and applies its decisions by pushing the membership events
+# above — scale-down is a REPLICA_FAIL that never recovers on its own,
+# scale-up a REPLICA_RECOVER of a parked replica
+AUTOSCALE = "autoscale"
 
 EDGE = "edge"
 DEVICE = "device"
@@ -60,6 +66,7 @@ class WorkItem:
 
     @property
     def rid(self) -> int:
+        """The carried request's id."""
         return self.req.rid
 
 
@@ -96,6 +103,8 @@ class EventQueue:
         return base
 
     def push(self, t: float, kind: str, payload: Any = None) -> None:
+        """Schedule an event at simulated time ``t`` (seq auto-assigned;
+        equal-time events pop in push order)."""
         seq = self._next_seq
         self._next_seq = seq + 1
         heapq.heappush(self._heap, (t, seq, kind, payload))
@@ -111,6 +120,7 @@ class EventQueue:
             self.peak_size = len(self._heap)
 
     def pop(self) -> Tuple[float, str, Any]:
+        """Remove and return the earliest event as ``(t, kind, payload)``."""
         t, _, kind, payload = heapq.heappop(self._heap)
         self.n_popped += 1
         return t, kind, payload

@@ -51,6 +51,8 @@ class FaultCounters:
                 self.reissued_whole_batch += 1
 
     def as_dict(self) -> Dict[str, int]:
+        """Exact integer counter dict — the golden/parity suites compare
+        this with strict equality, so keys and semantics are frozen."""
         return {
             "replica_failures": self.replica_failures,
             "replica_recoveries": self.replica_recoveries,
@@ -62,7 +64,35 @@ class FaultCounters:
 
 
 @dataclass
+class AutoscaleCounters:
+    """Autoscaler action bookkeeping, kept SEPARATE from
+    :class:`FaultCounters` on purpose: the golden/parity suites compare
+    ``FaultCounters.as_dict()`` with exact equality, so autoscale activity
+    must never leak into it.  Per-pool action counts live in
+    ``scale_ups_by_pool`` / ``scale_downs_by_pool``."""
+
+    ticks: int = 0  # AUTOSCALE evaluation events handled
+    scale_ups: int = 0  # replicas returned to service by the policy
+    scale_downs: int = 0  # replicas parked (drained) by the policy
+    scale_ups_by_pool: Dict[str, int] = field(default_factory=dict)
+    scale_downs_by_pool: Dict[str, int] = field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-ready counter dict (per-pool dicts copied)."""
+        return {
+            "ticks": self.ticks,
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "scale_ups_by_pool": dict(self.scale_ups_by_pool),
+            "scale_downs_by_pool": dict(self.scale_downs_by_pool),
+        }
+
+
+@dataclass
 class PoolStats:
+    """Per-pool serving counters: queue depth, batching efficiency,
+    handoff bytes, replica-busy seconds and fault/re-issue tallies."""
+
     # queue-depth distribution as bounded streaming stats (exact mean/max +
     # reservoir quantiles) — the old per-sample list grew O(requests) and
     # would OOM the ROADMAP's 10⁶-request fleet-scale replay
@@ -86,13 +116,19 @@ class PoolStats:
 
     @property
     def mean_batch(self) -> float:
+        """Mean real items per dispatched batch (0.0 before any batch)."""
         return self.batched_items / self.n_batches if self.n_batches else 0.0
 
 
 class RuntimeTelemetry:
+    """Aggregates per-pool stats plus fault and autoscale counters for one
+    runtime instance; read via :meth:`summary` (pools), ``.faults`` and
+    ``.autoscale``.  Pure Python counters — never perturbs the clock."""
+
     def __init__(self):
         self.pools: Dict[str, PoolStats] = {}
         self.faults = FaultCounters()
+        self.autoscale = AutoscaleCounters()
 
     def _pool(self, pool: str) -> PoolStats:
         # not setdefault: that would construct (and discard) a PoolStats —
@@ -103,10 +139,13 @@ class RuntimeTelemetry:
         return p
 
     def record_depth(self, pool: str, t: float, depth: int) -> None:
+        """Sample ``pool``'s queue depth at simulated time ``t``."""
         self._pool(pool).depth.add(t, depth)
 
     def record_batch(self, pool: str, n_items: int, bucket: int,
                      duration_s: float, forced: bool) -> None:
+        """Account one dispatched batch: real items, padded bucket size,
+        replica-busy seconds and whether the linger deadline forced it."""
         p = self._pool(pool)
         p.n_batches += 1
         p.batched_items += n_items
@@ -121,16 +160,38 @@ class RuntimeTelemetry:
         self._pool(pool).bytes_out += n_bytes * n_items
 
     def record_failure(self, pool: str, recovers: bool) -> None:
+        """Account one injected replica outage on ``pool`` (``recovers``
+        when a REPLICA_RECOVER is scheduled)."""
         self._pool(pool).failures += 1
         self.faults.replica_failures += 1
         if recovers:
             self.faults.replica_recoveries += 1
 
+    def record_autoscale_tick(self) -> None:
+        """Account one handled AUTOSCALE evaluation event."""
+        self.autoscale.ticks += 1
+
+    def record_scale(self, pool: str, up: bool) -> None:
+        """Account one applied autoscaler action on ``pool`` (scale-up
+        returns a parked replica; scale-down parks one)."""
+        a = self.autoscale
+        if up:
+            a.scale_ups += 1
+            a.scale_ups_by_pool[pool] = a.scale_ups_by_pool.get(pool, 0) + 1
+        else:
+            a.scale_downs += 1
+            a.scale_downs_by_pool[pool] = (
+                a.scale_downs_by_pool.get(pool, 0) + 1
+            )
+
     def record_straggler(self, reissued: bool, per_item: bool = False) -> None:
+        """Account one straggling request (see FaultCounters.note_straggler)."""
         self.faults.note_straggler(tripped=reissued, per_item=per_item)
 
     def record_reissue(self, pool: str, n_items: int = 0,
                        partial: bool = False) -> None:
+        """Account a straggler re-issue on ``pool``: a whole batch or a
+        ``partial`` straggler-only sub-batch of ``n_items`` samples."""
         p = self._pool(pool)
         if partial:
             p.reissued_partial_batches += 1
@@ -139,6 +200,8 @@ class RuntimeTelemetry:
         p.reissued_items += n_items
 
     def summary(self) -> Dict[str, dict]:
+        """Per-pool JSON-ready digest (queue depth, occupancy, batches,
+        bytes, busy seconds, faults); pools sorted by name."""
         out = {}
         for pool, p in sorted(self.pools.items()):
             out[pool] = {

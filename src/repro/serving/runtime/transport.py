@@ -42,6 +42,9 @@ def channelwise_roundtrip(x: np.ndarray, quantizer: str = "rowwise"):
 
 @dataclass
 class TransportConfig:
+    """Knobs for the latent handoff link: compression on/off, link
+    bandwidth in Mbit/s, quality-penalty sensitivity and wire quantizer."""
+
     compress: bool = True
     bw_mbps: float = 20.0
     # how strongly the measured reconstruction error discounts the
@@ -73,9 +76,11 @@ class HandoffTransport:
         ))
 
     def wire_bytes(self, family: Optional[str]) -> int:
+        """Payload bytes for one latent handoff of this family."""
         return lat.latent_wire_bytes(family, compressed=self.cfg.compress)
 
     def transfer_time(self, family: Optional[str], rtt_ms: float) -> float:
+        """Simulated seconds to move one latent over the configured link."""
         return lat.transfer_time(
             family, rtt_ms, bw_mbps=self.cfg.bw_mbps,
             compressed=self.cfg.compress,

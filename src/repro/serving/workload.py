@@ -38,6 +38,7 @@ class CyclePolicy(Policy):
         self.i = 0
 
     def select(self, ctx, avail):
+        """Next arm in the fixed cycle (ignores ctx and availability)."""
         arm = self.i % len(avail)
         self.i += 1
         return arm

@@ -1,0 +1,34 @@
+"""Documentation gates as tier-1 tests: the docstring lint on the public
+serving surface and the docs-tree internal-link checker both run inside
+the normal pytest sweep, so an undocumented public name or a broken
+``docs/`` link fails `PYTHONPATH=src python -m pytest` — not just the
+dedicated docs job in ``scripts/ci.sh``."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(script, *args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / script), *args],
+        capture_output=True, text=True,
+    )
+
+
+def test_serving_docstring_lint_clean():
+    r = _run("lint_docstrings.py")
+    assert r.returncode == 0, f"docstring lint failed:\n{r.stdout}{r.stderr}"
+
+
+def test_docs_internal_links_resolve():
+    r = _run("check_docs_links.py")
+    assert r.returncode == 0, f"broken docs links:\n{r.stdout}{r.stderr}"
+
+
+def test_docs_tree_exists():
+    # the three pages OPERATIONS/ARCHITECTURE/BENCHMARKS anchor the docs
+    # job; a rename must update this list (and the README pointers)
+    for page in ("ARCHITECTURE.md", "OPERATIONS.md", "BENCHMARKS.md"):
+        assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
