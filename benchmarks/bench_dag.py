@@ -1,0 +1,168 @@
+"""Speculative twin-hop frontier benchmark: DAG relay programs vs the
+paper's fixed 2-hop arms.
+
+Pure scheduling — no model training.  Each shipped speculative arm
+(``repro.serving.arms.DEFAULT_SPECULATIVE``) replays the identical Poisson
+stream on the continuous runtime under a single-arm policy, head-to-head
+against the fixed 2-hop arm it twins (same family, same split ``s``).  The
+speculative program runs the device continuation from ``s_spec < s`` in
+parallel with the edge's verification tail; the Select sink accepts when
+the modeled Eq. 1 deviation (inflated by the skipped-step fraction, decayed
+by the verification window — the Fig. 2 shape) stays inside the bound.
+
+The frontier claim this gate enforces: every speculative twin-hop must show
+a **lower p95 latency** than its fixed 2-hop twin at **equal-or-better
+effective deviation** (an accepted speculation carries its decayed
+post-verification deviation, a rejected one degenerates to the fixed arm's
+single compressed hop — so the deviation column can only tie or improve).
+The ensemble arm is reported alongside for the quality column, without a
+latency assertion (it buys deviation attenuation, not speed).
+
+Per arm: mean/p95 latency over the stream, accept rate, effective-deviation
+mean/max, mean reward, plus the analytic critical-path ideal from the
+calibrated latency model.  The traced speculative run is schema-validated
+with the Chrome-trace validator (branch tracks, join outcomes).
+
+  PYTHONPATH=src:. python benchmarks/bench_dag.py [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.policies import Policy
+from repro.core.program import as_graph, compile_plan
+from repro.serving import latency as lat
+from repro.serving.arms import dag_action_space
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.obs import attribution_residual
+from repro.serving.obs.export import to_chrome_trace, validate_chrome_trace
+from repro.serving.runtime import RuntimeConfig
+from repro.serving.workload import synthetic_quality_table
+
+RTT_MS = 80.0  # nominal edge→device link, matches bench_cascade
+
+
+class _Fixed(Policy):
+    """Single-arm policy: every request takes arm ``k``."""
+    name = "Fixed"
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def select(self, ctx, avail):
+        return self.k
+
+
+def _pairs(arms):
+    """(speculative, fixed twin) arm pairs by label, plus ensemble arms
+    with their linear partner: 'tag@s=20|spec=10' twins 'tag@s=20',
+    'tag@s=10&mid' partners 'tag@s=10'."""
+    by_label = {a.label: a for a in arms}
+    spec, ens = [], []
+    for a in arms:
+        if "|spec=" in a.label:
+            spec.append((a, by_label[a.label.split("|spec=")[0]]))
+        elif a.label.endswith("&mid"):
+            ens.append((a, by_label[a.label[: -len("&mid")]]))
+    return spec, ens
+
+
+def _run_arm(arm, arms, cfg, reqs):
+    """Replay the stream through a single arm; distill the Record stream
+    and the tracer's join spans into the frontier columns."""
+    qt = synthetic_quality_table(reqs, arms=arms)
+    eng = ServingEngine(_Fixed(arm.idx), qt, cfg, runtime="continuous",
+                        runtime_cfg=RuntimeConfig(trace=True), arms=arms)
+    recs = eng.run(reqs)
+    t = np.array([r.t_total for r in recs])
+    base_pct = eng.transport.handoff_error(arm.program.family) * 100.0
+    joins = [s for tr in eng.tracer.requests.values() for s in tr.spans
+             if s.kind == "join"]
+    selects = [s for s in joins if s.meta.get("accepted") is not None]
+    if selects:
+        # effective Eq. 1 deviation of the surviving path, per request
+        eff = np.array([s.meta["deviation_pct"] if s.meta["accepted"]
+                        else base_pct for s in selects])
+        accept_rate = float(np.mean([s.meta["accepted"] for s in selects]))
+    else:
+        # linear 2-hop / merge: one compressed hop per request
+        eff = np.full(len(recs), base_pct)
+        accept_rate = None
+    plan = compile_plan(as_graph(arm.program))
+    return {
+        "label": arm.label,
+        "mean_latency_s": float(np.mean(t)),
+        "p95_latency_s": float(np.percentile(t, 95)),
+        "ideal_s": lat.graph_ideal_seconds(plan, RTT_MS),
+        "mean_reward": float(np.mean([r.reward for r in recs])),
+        "accept_rate": accept_rate,
+        "eff_deviation_pct_mean": float(np.mean(eff)),
+        "eff_deviation_pct_max": float(np.max(eff)),
+        "base_deviation_pct": base_pct,
+        "coverage": eng.tracer.coverage(),
+        "attribution_residual": attribution_residual(eng.tracer),
+    }, eng
+
+
+def run(quick: bool = False) -> dict:
+    arms = dag_action_space()
+    n = 80 if quick else 240
+    cfg = SimConfig(n_requests=n, mean_interarrival=1.2, seed=9,
+                    straggler_prob=0.1, straggler_factor=4.0)
+    reqs = make_requests(cfg)
+    spec_pairs, ens_pairs = _pairs(arms)
+    out = {"n_requests": n, "rtt_ms": RTT_MS, "pairs": []}
+    validated = False
+    for kind, pairs in (("speculative", spec_pairs), ("ensemble", ens_pairs)):
+        for dag_arm, fixed_arm in pairs:
+            d, eng = _run_arm(dag_arm, arms, cfg, reqs)
+            f, _ = _run_arm(fixed_arm, arms, cfg, reqs)
+            if not validated and kind == "speculative":
+                errors = validate_chrome_trace(to_chrome_trace(
+                    eng.tracer, meta={"benchmark": "dag"}))
+                assert not errors, f"dag trace schema errors: {errors[:3]}"
+                validated = True
+            p95_win = f["p95_latency_s"] / d["p95_latency_s"]
+            dev_ok = (d["eff_deviation_pct_mean"]
+                      <= f["eff_deviation_pct_mean"] + 1e-9)
+            row = {"kind": kind, "dag": d, "fixed": f,
+                   "p95_win": p95_win, "deviation_ok": dev_ok,
+                   "on_frontier": p95_win > 1.0 and dev_ok}
+            out["pairs"].append(row)
+            emit(
+                f"dag_{kind}_{dag_arm.label.replace('@', '_')}",
+                0.0,
+                f"p95={d['p95_latency_s']:.2f}s;fixed_p95="
+                f"{f['p95_latency_s']:.2f}s;p95_win={p95_win:.2f}x;"
+                f"dev={d['eff_deviation_pct_mean']:.3f}%;"
+                f"fixed_dev={f['eff_deviation_pct_mean']:.3f}%;"
+                + (f"accept={d['accept_rate']:.2f};"
+                   if d["accept_rate"] is not None else "")
+                + f"on_frontier={row['on_frontier']}",
+            )
+    # the gate: every speculative twin-hop on the frontier — strictly
+    # lower p95 than its fixed 2-hop twin at equal-or-better deviation
+    spec_rows = [r for r in out["pairs"] if r["kind"] == "speculative"]
+    assert spec_rows, "no speculative arms in the action space"
+    for r in spec_rows:
+        assert r["p95_win"] > 1.0, (
+            f"{r['dag']['label']}: p95 {r['dag']['p95_latency_s']:.2f}s not "
+            f"below fixed twin {r['fixed']['p95_latency_s']:.2f}s")
+        assert r["deviation_ok"], (
+            f"{r['dag']['label']}: effective deviation "
+            f"{r['dag']['eff_deviation_pct_mean']:.3f}% above fixed twin "
+            f"{r['fixed']['eff_deviation_pct_mean']:.3f}%")
+    n_front = sum(r["on_frontier"] for r in out["pairs"])
+    emit("dag_summary", 0.0,
+         f"on_frontier={n_front}/{len(out['pairs'])};"
+         f"spec_frontier={len(spec_rows)}/{len(spec_rows)}")
+    # quick (CI smoke) runs must not clobber the shipped full-run numbers
+    save_json("bench_dag_quick" if quick else "bench_dag", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -46,6 +46,14 @@ if [ "${1:-full}" = "full" ]; then
     python -m pytest -q --durations=0 --junitxml "$JUNIT_DIR/e2e.xml" \
         tests/test_e2e_smoke.py
 
+    echo "== dag frontier (speculative twin-hop vs fixed 2-hop, pure scheduling) =="
+    # the DAG-IR gate: bench_dag --quick replays the shipped speculative
+    # arms head-to-head against their fixed 2-hop twins and asserts every
+    # one lands on the frontier (lower p95 at equal-or-better Eq. 1
+    # deviation); pure scheduling, no family training
+    python -m pytest -q --durations=0 --junitxml "$JUNIT_DIR/dag.xml" \
+        tests/test_e2e_dag.py
+
     echo "== distributed correctness (sharded/pipeline/psum vs local refs) =="
     # explicit hard gate (not just via the tier-1 sweep): the distribution
     # suite plus the mesh×dtype×quantizer parity harness.  --durations and
@@ -98,6 +106,7 @@ if [ "${1:-full}" = "full" ]; then
         --ignore tests/test_distribution.py \
         --ignore tests/test_distribution_parity.py \
         --ignore tests/test_e2e_smoke.py \
+        --ignore tests/test_e2e_dag.py \
         | tee "$out"
     rc=${PIPESTATUS[0]}
     set -e

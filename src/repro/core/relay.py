@@ -19,8 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import samplers
-from repro.core.program import (ROLES, Handoff, RelayProgram, RelaySegment,
-                                phase_name)
+from repro.core.program import (MERGE_NODE, ROLES, SEGMENT_NODE, SELECT_NODE,
+                                CompiledPlan, Handoff, RelayGraph,
+                                RelayProgram, RelaySegment, as_graph,
+                                compile_plan, phase_name, select_bound_pct)
 from repro.core.schedules import sigma_match
 
 
@@ -191,6 +193,140 @@ def execute_program(
         "handoff_deviation_pct": worst_dev,
     }
     return x, info
+
+
+def execute_graph(
+    spec: FamilySpec,
+    graph: "RelayGraph | CompiledPlan",
+    models: Mapping[str, Tuple[Callable, object]],
+    x_init: jnp.ndarray,
+    cond,
+    *,
+    uncond=None,
+    capture_traj: bool = False,
+):
+    """The flow coordinator: execute a DAG plan over real latents.
+
+    Walks the compiled plan in canonical topological order — each ready
+    node's input latent is resolved from its predecessor edges (hop edges
+    round-trip through the wire quantizer with Eq. 1 deviation accounting,
+    exactly as :func:`execute_program` does per hop), ``Merge`` nodes
+    average their incoming branch latents, and ``Select`` nodes measure the
+    candidate branch's Eq. 1 deviation against the reference branch and
+    keep the candidate iff it is within the node's bound.  The coordinator
+    is eager, so the reference branch is always *computed* (it is the
+    measurement baseline); cancellation on acceptance is a scheduling
+    concern that lives in the serving engines.
+
+    A chain graph performs the identical op sequence as
+    :func:`execute_program` on the bridged program — bit-identical latents
+    (property-tested in ``tests/test_dag.py``).
+
+    Returns ``(x_final, info)``; ``info`` mirrors the linear coordinator
+    (``trajs``/``hops``/``transfer_bytes``/``handoff_deviation_pct`` over
+    the *surviving* path) plus ``joins`` — one dict per join node with the
+    winning predecessor and, for selects, the measured candidate deviation
+    and the accept decision."""
+    plan = graph if isinstance(graph, CompiledPlan) else compile_plan(as_graph(graph))
+    sample = _sampler(spec.kind)
+
+    def _for(role, v):
+        return v[role] if isinstance(v, dict) else v
+
+    out: dict = {}  # nid -> output latent
+    path_dev: dict = {}  # nid -> worst hop deviation on the path into nid
+    path_bytes: dict = {}  # nid -> wire bytes on the path into nid
+    trajs, hops, joins = [], [], []
+
+    def _cross(edge, x):
+        """Deliver a latent across an edge, round-tripping hop edges."""
+        if edge.handoff is None or not edge.handoff.compress:
+            nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+            if edge.handoff is None:
+                nbytes = 0  # zero-cost continuation / join input
+            return x, nbytes, jnp.zeros(())
+        from repro.quantization import latent_roundtrip, relative_deviation
+
+        rec, nbytes = latent_roundtrip(x, edge.handoff.quantizer)
+        dev = relative_deviation(x, rec) * 100.0
+        return rec, nbytes, dev
+
+    for node in plan.nodes:
+        pe = plan.preds[node.nid]
+        if node.kind == SEGMENT_NODE:
+            if not pe:
+                x_in, dev_in, bytes_in = x_init, jnp.zeros(()), 0
+            else:
+                e = pe[0]
+                x_up = out[e.src]
+                x_in, nbytes, dev = _cross(e, x_up)
+                if e.handoff is not None:
+                    hops.append({
+                        "x_out": x_up,
+                        "transfer_bytes": nbytes,
+                        "deviation_pct": dev,
+                        "sigma_out": e.handoff.sigma_out,
+                        "sigma_in": e.handoff.sigma_in,
+                        "edge": (e.src, e.dst),
+                    })
+                dev_in = jnp.maximum(path_dev[e.src], dev)
+                bytes_in = path_bytes[e.src] + nbytes
+            seg = node.segment
+            fn, params = models[seg.model]
+            x, traj = sample(
+                fn, params, x_in, spec.ladder(seg.model), _for(seg.model, cond),
+                start=seg.start, stop=seg.stop,
+                uncond=_for(seg.model, uncond) if uncond is not None else None,
+                guidance=seg.guidance, capture_traj=capture_traj,
+            )
+            trajs.append(traj)
+            out[node.nid] = x
+            path_dev[node.nid] = dev_in
+            path_bytes[node.nid] = bytes_in
+        elif node.kind == MERGE_NODE:
+            xs = [out[e.src] for e in pe]
+            out[node.nid] = sum(xs[1:], xs[0]) / float(len(xs))
+            # every branch's wire crossed; deviation follows the worst one
+            path_dev[node.nid] = max(
+                (path_dev[e.src] for e in pe), key=float
+            )
+            path_bytes[node.nid] = sum(path_bytes[e.src] for e in pe)
+            joins.append({"node": node.nid, "kind": MERGE_NODE,
+                          "inputs": [e.src for e in pe]})
+        else:  # SELECT_NODE
+            from repro.quantization import relative_deviation
+
+            sel = plan.selects[node.nid]
+            ref = sel.reference
+            cand = sel.candidates[0]
+            dev_cand = relative_deviation(out[ref], out[cand]) * 100.0
+            base = float(path_dev[ref])
+            bound = select_bound_pct(node, base if base > 0.0 else 1.0)
+            accept = bool(float(dev_cand) <= bound)
+            winner = cand if accept else ref
+            out[node.nid] = out[winner]
+            path_dev[node.nid] = jnp.maximum(
+                path_dev[winner], dev_cand if accept else jnp.zeros(())
+            )
+            path_bytes[node.nid] = path_bytes[winner]
+            joins.append({
+                "node": node.nid, "kind": SELECT_NODE, "winner": winner,
+                "accepted": accept, "deviation_pct": float(dev_cand),
+                "bound_pct": bound,
+            })
+
+    sink = plan.sink
+    info = {
+        "trajs": trajs,
+        "hops": hops,
+        "joins": joins,
+        "segment_steps": [n.segment.steps for n in plan.nodes
+                          if n.kind == SEGMENT_NODE],
+        "phases": [n.nid for n in plan.nodes],
+        "transfer_bytes": int(path_bytes[sink]),
+        "handoff_deviation_pct": path_dev[sink],
+    }
+    return out[sink], info
 
 
 def relay_generate(

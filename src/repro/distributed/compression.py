@@ -5,12 +5,11 @@ The quantizers themselves live in :mod:`repro.quantization` — one module owns
 every int8 round-trip (relay handoff transport, optimizer state, and these
 collectives) so the relay's Eq.1-style deviation model and the collective's
 error feedback share one code path.  This module keeps the collective
-(`compressed_psum`) and re-exports the historical quantizer names with a
-DeprecationWarning for external callers.
+(`compressed_psum`); the historical quantizer re-exports completed their
+deprecation cycle (DeprecationWarning through the previous releases) and now
+raise ImportError pointing at the new home.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +20,9 @@ from repro.quantization import error_feedback_step, get_quantizer
 
 Array = jax.Array
 
-# historical API, now in repro.quantization — resolved lazily via
-# __getattr__ below so importing them still works but warns
+# historical API, now in repro.quantization — the lazy warning re-export
+# shipped for the deprecation window; the window is over, so resolving an
+# old name is now a hard error that says exactly where to import from
 _MOVED = (
     "quant_rowwise", "dequant_rowwise", "quant_error",
     "quant_log8", "dequant_log8", "LOG8_RANGE",
@@ -32,14 +32,10 @@ _MOVED = (
 
 def __getattr__(name: str):
     if name in _MOVED:
-        warnings.warn(
-            f"repro.distributed.compression.{name} moved to "
-            f"repro.quantization.{name}; this re-export will be removed",
-            DeprecationWarning, stacklevel=2,
+        raise ImportError(
+            f"repro.distributed.compression.{name} was removed after its "
+            f"deprecation cycle; import repro.quantization.{name} instead"
         )
-        import repro.quantization as q
-
-        return getattr(q, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

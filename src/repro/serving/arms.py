@@ -18,7 +18,9 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Optional, Sequence, Tuple
 
-from repro.core.program import RelayProgram, make_program
+from repro.core.program import (MERGE_NODE, SELECT_NODE, GraphEdge,
+                                GraphNode, Handoff, RelayGraph, RelayProgram,
+                                RelaySegment, make_program)
 
 RELAY_STEPS = (5, 10, 15, 20, 25)
 
@@ -48,7 +50,7 @@ class Arm:
     program onto the quantities older call sites expect."""
 
     idx: int
-    program: RelayProgram
+    program: RelayProgram  # or a RelayGraph — both plan currencies work
     label: str
 
     # ---- legacy two-hop views -------------------------------------------
@@ -127,6 +129,107 @@ def cascade_program(family: str, s_large: int, s_mid: int) -> RelayProgram:
     )
 
 
+def speculative_program(family: str, s: int, s_spec: int,
+                        bound_pct: Optional[float] = None,
+                        quantizer: str = "rowwise") -> RelayGraph:
+    """Speculative twin-hop DAG (the EC-Diff-style dynamic branch): the
+    device branch starts from a *compressed early handoff* at ``s_spec``
+    while the edge model finishes the remaining ``s − s_spec`` steps; the
+    Select node's Eq. 1 deviation bound then decides which handoff
+    survives.
+
+    Accept: the speculative device branch — already ``verify_steps`` into
+    its ladder — becomes the result, the reference continuation is
+    cancelled, and the edge tail latency is hidden.  Reject: the reference
+    hop at ``s`` proceeds exactly like the fixed two-hop arm (the
+    speculative branch's pool time is the price of the gamble).
+    ``bound_pct=None`` means relative mode: accept within
+    ``SPEC_BOUND_REL ×`` the wire's measured roundtrip deviation."""
+    from repro.core.schedules import sigma_match
+
+    if not 0 < s_spec < s:
+        raise ValueError(f"need 0 < s_spec < s, got s={s}, s_spec={s_spec}")
+    spec = _spec(family)
+    pools = FAMILY_POOLS[family]
+    ladder_e, ladder_d = spec.ladder("large"), spec.ladder("small")
+    t_d = len(ladder_d) - 1
+    sp = sigma_match(ladder_e, s, ladder_d)
+    sp_spec = sigma_match(ladder_e, s_spec, ladder_d)
+    nodes = (
+        GraphNode("edge", segment=RelaySegment("large", pools["large"],
+                                               0, s_spec)),
+        GraphNode("edge+", segment=RelaySegment("large", pools["large"],
+                                                s_spec, s), branch="ref"),
+        GraphNode("device~spec",
+                  segment=RelaySegment("small", pools["small"], sp_spec, t_d),
+                  branch="spec"),
+        GraphNode("device",
+                  segment=RelaySegment("small", pools["small"], sp, t_d),
+                  branch="ref"),
+        GraphNode("select", kind=SELECT_NODE, reference="device",
+                  gate="edge+", bound_pct=bound_pct),
+    )
+    edges = (
+        GraphEdge("edge", "edge+"),
+        GraphEdge("edge", "device~spec",
+                  handoff=Handoff(float(ladder_e[s_spec]),
+                                  float(ladder_d[sp_spec]),
+                                  compress=True, quantizer=quantizer)),
+        GraphEdge("edge+", "device",
+                  handoff=Handoff(float(ladder_e[s]), float(ladder_d[sp]),
+                                  compress=True, quantizer=quantizer)),
+        GraphEdge("device~spec", "select"),
+        GraphEdge("device", "select"),
+    )
+    return RelayGraph(family, nodes, edges)
+
+
+def ensemble_program(family: str, s: int,
+                     quantizer: str = "rowwise") -> RelayGraph:
+    """Ensemble DAG: one edge prefix fans out to the small *and* mid
+    models (each resuming from its own Eq. 4 sigma-matched entry over a
+    compressed handoff); a Merge node averages the branch latents.
+    Completion is the slower branch — this arm buys quality (more total
+    refinement steps, branch-noise averaging) with latency."""
+    from repro.core.schedules import sigma_match
+
+    spec = _spec(family)
+    pools = FAMILY_POOLS[family]
+    ladder_e = spec.ladder("large")
+    ladder_d, ladder_m = spec.ladder("small"), spec.ladder("mid")
+    sp = sigma_match(ladder_e, s, ladder_d)
+    spm = sigma_match(ladder_e, s, ladder_m)
+    nodes = (
+        GraphNode("edge", segment=RelaySegment("large", pools["large"], 0, s)),
+        GraphNode("device",
+                  segment=RelaySegment("small", pools["small"], sp,
+                                       len(ladder_d) - 1),
+                  branch="a"),
+        GraphNode("refine",
+                  segment=RelaySegment("mid", pools["mid"], spm,
+                                       len(ladder_m) - 1),
+                  branch="b"),
+        GraphNode("merge", kind=MERGE_NODE),
+    )
+    edges = (
+        GraphEdge("edge", "device",
+                  handoff=Handoff(float(ladder_e[s]), float(ladder_d[sp]),
+                                  compress=True, quantizer=quantizer)),
+        GraphEdge("edge", "refine",
+                  handoff=Handoff(float(ladder_e[s]), float(ladder_m[spm]),
+                                  compress=True, quantizer=quantizer)),
+        GraphEdge("device", "merge"),
+        GraphEdge("refine", "merge"),
+    )
+    return RelayGraph(family, nodes, edges)
+
+
+#: the shipped speculative arms: (family, s, s_spec)
+DEFAULT_SPECULATIVE = (("XL", 20, 10), ("XL", 25, 15), ("F3", 20, 10))
+#: the shipped ensemble arms: (family, s)
+DEFAULT_ENSEMBLES = (("XL", 10),)
+
+
 def build_action_space(
     relay_steps: Sequence[int] = RELAY_STEPS,
     families: Sequence[str] = ("XL", "F3"),
@@ -156,6 +259,29 @@ def build_action_space(
 def cascade_action_space() -> Tuple[Arm, ...]:
     """The legacy 11 arms plus the shipped 3-hop L→M→S program set."""
     return build_action_space(cascades=DEFAULT_CASCADES)
+
+
+def dag_action_space(
+    speculative: Sequence[Tuple[str, int, int]] = DEFAULT_SPECULATIVE,
+    ensembles: Sequence[Tuple[str, int]] = DEFAULT_ENSEMBLES,
+) -> Tuple[Arm, ...]:
+    """The legacy 11 arms plus DAG-program arms: speculative twin-hop
+    arms (``family@s=S|spec=s`` — the fixed 2-hop arm at ``S`` with a
+    speculative early handoff at ``s``) and latent-averaging ensemble arms
+    (``family@s=S&mid``)."""
+    arms = list(build_action_space())
+    for family, s, s_spec in speculative:
+        tag = "sdxl+vega" if family == "XL" else "sd35L+M"
+        arms.append(
+            Arm(len(arms), speculative_program(family, s, s_spec),
+                f"{tag}@s={s}|spec={s_spec}")
+        )
+    for family, s in ensembles:
+        tag = "sdxl+vega" if family == "XL" else "sd35L+M"
+        arms.append(
+            Arm(len(arms), ensemble_program(family, s), f"{tag}@s={s}&mid")
+        )
+    return tuple(arms)
 
 
 ARMS = build_action_space()

@@ -22,7 +22,9 @@ import numpy as np
 
 from repro.core.context import Request, context_vector
 from repro.core.policies import Policy
-from repro.core.program import phase_name
+from repro.core.program import (MERGE_NODE, SEGMENT_NODE, SELECT_NODE,
+                                RelayGraph, compile_plan, phase_name,
+                                select_outcome)
 from repro.core.reward import RewardInputs, compute_reward
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, N_ARMS, Arm, pools_used
@@ -340,6 +342,12 @@ class ServingEngine:
             arm = self.arms[arm_idx]
             prog = arm.program
 
+            if isinstance(prog, RelayGraph):
+                records.append(self._run_graph_request(
+                    req, arm_idx, arm, pools, occ, ctx, tracer, fc, per_item
+                ))
+                continue
+
             lb = lat.program_latency(
                 prog, req.rtt_ms, rng=self.rng,
                 compressed=self.transport.cfg.compress,
@@ -415,6 +423,180 @@ class ServingEngine:
             )
         self.trace = tracer.legacy_view()
         return records
+
+    def _run_graph_request(self, req: Request, arm_idx: int, arm: Arm,
+                           pools: Pools, occ: dict, ctx: np.ndarray,
+                           tracer: SpanTracer, fc: FaultCounters,
+                           per_item: bool) -> Record:
+        """Serve one request whose arm is a DAG program (RelayGraph).
+
+        The canonical-order walk generalizes the linear loop: each segment
+        node is ready at the max over its live predecessors' arrival times
+        and holds its pool for its own jittered duration; Merge resolves at
+        the slower branch; Select resolves at its gate's completion via the
+        shared :func:`repro.core.program.select_outcome` decision (pure in
+        request + plan + transport, so the continuous runtime replays it
+        identically).  Accepted selects cancel the plan's ``skip_on_accept``
+        nodes — they never acquire a pool and emit no spans, in either
+        engine.  Jitter draws happen in canonical node order from the same
+        ``cfg.seed + 17`` stream the linear path uses."""
+        prog = arm.program
+        plan = compile_plan(prog)
+        tcfg = self.transport.cfg
+        node_s = lat.graph_node_seconds(plan, rng=self.rng)
+        hop_s = lat.graph_hop_seconds(
+            plan, req.rtt_ms, bw_mbps=tcfg.bw_mbps, compressed=tcfg.compress
+        )
+        # zero-queue baseline at this request's jittered costs, pre-straggler
+        # (the linear path's `lb.total` analog) — clamped below because an
+        # accepted speculation can legitimately beat the reference critical
+        # path that the baseline prices
+        ideal = lat.graph_critical_seconds(plan, node_s, hop_s)
+        now = req.arrival
+
+        base_pct = self.transport.handoff_error(prog.family) * 100.0
+        decisions = {
+            nid: select_outcome(plan, nid, req.complexity, base_pct)
+            for nid in plan.selects
+        }
+        skip: set = set()
+        for nid, (accepted, _, _) in decisions.items():
+            if accepted:
+                skip |= plan.selects[nid].skip_on_accept
+
+        # straggler injection hits the root (edge) node only — the same
+        # request-intrinsic partition and re-issue arithmetic as the linear
+        # path's first segment
+        kept_slow, tripped, draws = partition_stragglers(self.cfg, [req.rid])
+        src = plan.source
+        nominal_root = node_s[src]
+        if prog.is_relay:
+            if tripped:
+                node_s[src] = lat.reissue_latency(
+                    node_s[src], self.cfg.straggler_reissue
+                )
+            else:
+                node_s[src] = node_s[src] * kept_slow
+            if draws[req.rid] > 1.0:
+                fc.note_straggler(bool(tripped), per_item=per_item)
+
+        tracer.start_request(req.rid, now, arm_idx, arm.label)
+        nbytes = self.transport.wire_bytes(arm.family)
+        done: Dict[str, float] = {}
+        for ni, node in enumerate(plan.nodes):
+            nid = node.nid
+            if nid in skip:
+                continue
+            live_preds = [e for e in plan.preds[nid] if e.src not in skip]
+            if node.kind == SEGMENT_NODE:
+                ready = now
+                for e in live_preds:
+                    ready = max(ready, done[e.src] + hop_s[(e.src, e.dst)])
+                t_done = pools.acquire(node.segment.pool, ready, node_s[nid])
+                start = t_done - node_s[nid]
+                tracer.enqueue(req.rid, nid, ready, branch=node.branch)
+                tracer.start_segment(req.rid, nid, start, node.segment.pool,
+                                     n_items=1, bucket=1, seg_idx=ni,
+                                     branch=node.branch)
+                tracer.end_segment(req.rid, t_done, name=nid)
+                if nid == src and prog.is_relay and tripped:
+                    tracer.reissue(
+                        req.rid,
+                        start + nominal_root
+                        * max(self.cfg.straggler_reissue - 1.0, 0.0),
+                        partial=per_item,
+                    )
+                done[nid] = t_done
+                live_succ = [e for e in plan.succs[nid] if e.dst not in skip]
+                if len(live_succ) > 1:
+                    branches = tuple(
+                        plan.nodes[plan.index[e.dst]].branch or e.dst
+                        for e in live_succ
+                    )
+                    tracer.branch_point(req.rid, nid, t_done, branches)
+                for e in live_succ:
+                    if e.handoff is not None:
+                        dst = plan.nodes[plan.index[e.dst]]
+                        tracer.hop(
+                            req.rid, f":{nid}->{e.dst}", t_done,
+                            t_done + hop_s[(nid, e.dst)], nbytes,
+                            compressed=tcfg.compress,
+                            pool=node.segment.pool,
+                            branch=dst.branch or node.branch,
+                        )
+            elif node.kind == MERGE_NODE:
+                arrive = {
+                    e.src: done[e.src] + hop_s[(e.src, e.dst)]
+                    for e in live_preds
+                }
+                winner = max(arrive, key=lambda s: (arrive[s], s))
+                t_done = arrive[winner]
+                for e in live_preds:
+                    b = plan.nodes[plan.index[e.src]].branch
+                    if e.src != winner and b:
+                        tracer.mark_offpath(req.rid, b)
+                tracer.join(
+                    req.rid, nid, t_done, t_done, kind="merge",
+                    winner=plan.nodes[plan.index[winner]].branch or winner,
+                    inputs=sorted(arrive),
+                )
+                done[nid] = t_done
+            else:  # SELECT_NODE
+                sel = plan.selects[nid]
+                accepted, dev, bound = decisions[nid]
+                cand = sel.candidates[0]
+                winner = cand if accepted else sel.reference
+                loser = sel.reference if accepted else cand
+                arrival = done[winner] + hop_s[(winner, nid)]
+                decision_t = (
+                    done[sel.gate] if sel.gate is not None and accepted
+                    else arrival
+                )
+                t_done = max(arrival, decision_t)
+                b_lose = plan.nodes[plan.index[loser]].branch
+                if b_lose:
+                    tracer.mark_offpath(req.rid, b_lose)
+                tracer.join(
+                    req.rid, nid, arrival, t_done, kind="select",
+                    accepted=accepted, deviation_pct=dev, bound_pct=bound,
+                    winner=plan.nodes[plan.index[winner]].branch or winner,
+                )
+                done[nid] = t_done
+        t_done = done[plan.sink]
+        tracer.end_request(req.rid, t_done)
+        t_total = t_done - req.arrival
+        wait = max(0.0, t_total - ideal)
+
+        q = graph_quality(self.transport, plan, arm, decisions, base_pct,
+                          self.qt[req.rid, arm_idx])
+        l_dev = max(occ[pool_key(p)] for p in pools_used(arm))
+        r_report = score_and_update(
+            self.policy, arm_idx, ctx, q, t_total, l_dev,
+            dynamic_reward=self.dynamic_reward, arms=self.arms,
+        )
+        return Record(req.rid, arm_idx, r_report, t_total, q, ctx, wait)
+
+
+def graph_quality(transport: HandoffTransport, plan, arm: Arm,
+                  decisions: dict, base_pct: float, q0: dict) -> dict:
+    """Quality delta of a DAG program's surviving path — shared by both
+    serving runtimes so their Records agree for identical decisions.
+
+    Select sink: the surviving handoff's Eq. 1 deviation prices the
+    penalty — an accepted speculation carries its modeled (decayed)
+    post-verification deviation, a rejected one degenerates to the fixed
+    arm's single-hop wire constant.  Merge sink: one-hop charge — latent
+    averaging attenuates the branches' independent quantization noise
+    rather than stacking it.  Segment sink (generic DAG): the linear rule,
+    once per compressed hop."""
+    sink = plan.nodes[plan.index[plan.sink]]
+    if sink.kind == SELECT_NODE:
+        accepted, dev, _ = decisions[plan.sink]
+        dev_used = dev if accepted else base_pct
+        return transport.deviation_quality_delta(arm.family, q0, dev_used)
+    if sink.kind == MERGE_NODE:
+        return transport.quality_delta(arm.family, q0, n_hops=1)
+    return transport.quality_delta(arm.family, q0, n_hops=arm.n_hops)
 
 
 def _pool_key(pool: str) -> str:

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import samplers
-from repro.core.program import RelayProgram
+from repro.core.program import (MERGE_NODE, SEGMENT_NODE, SELECT_NODE,
+                                RelayGraph, RelayProgram, compile_plan,
+                                select_bound_pct)
 from repro.diffusion import synth
 from repro.diffusion.families import Family, role_fn, role_params
 from repro.serving import metrics
@@ -112,10 +114,47 @@ class Executor:
             )
         return self._hop_fns[quantizer]
 
-    def _pipeline(self, program: RelayProgram, latent_shape, per_key: bool):
+    def _merge_fn(self, k: int):
+        """Jitted latent average over ``k`` branch inputs (Merge nodes)."""
+        key = ("merge", k)
+        if key not in self._hop_fns:
+            self._hop_fns[key] = jax.jit(
+                lambda *xs: sum(xs[1:], xs[0]) / float(len(xs))
+            )
+        return self._hop_fns[key]
+
+    def _hop_dev_fn(self, quantizer: str):
+        """Jitted wire roundtrip that also returns the Eq. 1 deviation —
+        DAG pipelines need the measured deviation to resolve Select
+        bounds."""
+        key = ("hopdev", quantizer)
+        if key not in self._hop_fns:
+            from repro.quantization import latent_roundtrip, relative_deviation
+
+            def fn(x):
+                rec, _ = latent_roundtrip(x, quantizer)
+                return rec, relative_deviation(x, rec) * 100.0
+
+            self._hop_fns[key] = jax.jit(fn)
+        return self._hop_fns[key]
+
+    def _pipeline(self, program, latent_shape, per_key: bool):
         """Composed runner for a program shape: noise → segments × handoffs.
         Segment bounds arrive as call-time int32 arguments, so programs
-        sharing a shape share this runner *and* its compiled pieces."""
+        sharing a shape share this runner *and* its compiled pieces.
+
+        Accepts either plan currency: a chain :class:`RelayGraph`
+        normalizes to its equivalent linear program (sharing this cache
+        with legacy arms, bit-identically); a branching graph compiles via
+        :meth:`_graph_pipeline` through the same per-segment/per-hop
+        caches."""
+        if isinstance(program, RelayGraph):
+            plan = compile_plan(program)
+            if plan.is_chain:
+                program = plan.linear_program()
+            else:
+                return self._graph_pipeline(program, plan, latent_shape,
+                                            per_key)
         self._requests += 1
         shape = (program.shape_key(), tuple(latent_shape), per_key)
         if shape in self._pipelines:
@@ -149,6 +188,77 @@ class Executor:
         self._pipelines[shape] = run
         return run
 
+    def _graph_pipeline(self, graph: RelayGraph, plan, latent_shape,
+                        per_key: bool):
+        """Composed runner for a branching DAG plan.
+
+        Node groups compile through the *same* shape-keyed caches as linear
+        programs — each segment node reuses the per-(family, role, guidance)
+        jitted sampler with traced bounds, hop edges the jitted wire
+        roundtrips, Merge nodes a jitted k-way latent average.  Select
+        resolution is eager (the accept decision is Python control flow):
+        the candidate branch's Eq. 1 deviation against the reference latent
+        decides which handoff survives."""
+        self._requests += 1
+        shape = (graph.shape_key(), tuple(latent_shape), per_key)
+        if shape in self._pipelines:
+            return self._pipelines[shape]
+        fam = self.families[graph.family]
+        if (isinstance(fam, Family) and not fam.has_mid
+                and any(s.model == "mid" for s in graph.segments)):
+            raise ValueError(
+                f"family {graph.family} has no trained mid-size stage — "
+                f"load families with with_mid=True to run cascade programs"
+            )
+        noise = self._noise_fn(latent_shape, per_key)
+        seg_fns = {
+            n.nid: self._segment_fn(graph.family, n.segment.model,
+                                    n.segment.guidance)
+            for n in plan.nodes if n.kind == SEGMENT_NODE
+        }
+        from repro.quantization import relative_deviation
+
+        dev_fn = jax.jit(lambda a, b: relative_deviation(a, b) * 100.0)
+
+        def run(key, cond, bounds):
+            out, path_dev = {}, {}
+            x0 = noise(key, cond)
+            for i, node in enumerate(plan.nodes):
+                pe = plan.preds[node.nid]
+                if node.kind == SEGMENT_NODE:
+                    if not pe:
+                        x_in, d_in = x0, 0.0
+                    else:
+                        e = pe[0]
+                        x_in, d_in = out[e.src], path_dev[e.src]
+                        if e.handoff is not None and e.handoff.compress:
+                            x_in, dev = self._hop_dev_fn(e.handoff.quantizer)(
+                                x_in)
+                            d_in = max(d_in, float(dev))
+                    out[node.nid] = seg_fns[node.nid](
+                        role_params(fam, node.segment.model), x_in, cond,
+                        *bounds[i]
+                    )
+                    path_dev[node.nid] = d_in
+                elif node.kind == MERGE_NODE:
+                    xs = [out[e.src] for e in pe]
+                    out[node.nid] = self._merge_fn(len(xs))(*xs)
+                    path_dev[node.nid] = max(path_dev[e.src] for e in pe)
+                else:  # SELECT_NODE
+                    sel = plan.selects[node.nid]
+                    ref, cand = sel.reference, sel.candidates[0]
+                    dev_cand = float(dev_fn(out[ref], out[cand]))
+                    base = path_dev[ref]
+                    bound = select_bound_pct(node,
+                                             base if base > 0.0 else 1.0)
+                    winner = cand if dev_cand <= bound else ref
+                    out[node.nid] = out[winner]
+                    path_dev[node.nid] = path_dev[winner]
+            return out[plan.sink]
+
+        self._pipelines[shape] = run
+        return run
+
     def cache_stats(self) -> Dict[str, float]:
         """Shape-cache telemetry: how many distinct compiled pipelines back
         the requested arm programs (the dedup the shape key buys)."""
@@ -168,7 +278,19 @@ class Executor:
     # ------------------------------------------------------------------
 
     @staticmethod
-    def _bounds(program: RelayProgram):
+    def _bounds(program):
+        if isinstance(program, RelayGraph):
+            plan = compile_plan(program)
+            if plan.is_chain:
+                program = plan.linear_program()
+            else:
+                # per canonical node: traced bounds for segments, a
+                # placeholder for join nodes (positional with plan.nodes)
+                return tuple(
+                    (jnp.int32(n.segment.start), jnp.int32(n.segment.stop))
+                    if n.kind == SEGMENT_NODE else ()
+                    for n in plan.nodes
+                )
         return tuple(
             (jnp.int32(seg.start), jnp.int32(seg.stop))
             for seg in program.segments

@@ -166,6 +166,67 @@ def program_vram(program: RelayProgram) -> float:
     return max(VRAM_GB[seg.pool] for seg in program.segments)
 
 
+def graph_node_seconds(plan, rng: Optional[np.random.Generator] = None):
+    """Jittered denoise seconds per segment node of a compiled DAG plan.
+
+    Jitter draws happen in canonical topological order, so a chain graph
+    consumes the RNG stream exactly as :func:`program_latency` does on the
+    bridged linear program — draw-for-draw."""
+    from repro.core.program import SEGMENT_NODE
+
+    return {
+        n.nid: STEP_COST[n.segment.pool] * n.segment.steps * _jitter(rng)
+        for n in plan.nodes if n.kind == SEGMENT_NODE
+    }
+
+
+def graph_hop_seconds(plan, rtt_ms: float, *, bw_mbps: float = 20.0,
+                      compressed: Optional[bool] = None):
+    """Wire+RTT seconds per edge of a compiled DAG plan: handoff edges are
+    priced like linear hops (:func:`transfer_time`), zero-cost edges
+    (same-pool continuations, join inputs) are free."""
+    fam = plan.graph.family if plan.graph.is_relay else None
+    out = {}
+    for e in plan.edge_order:
+        if e.handoff is None:
+            out[(e.src, e.dst)] = 0.0
+        else:
+            out[(e.src, e.dst)] = transfer_time(
+                fam, rtt_ms, bw_mbps=bw_mbps,
+                compressed=e.handoff.compress if compressed is None
+                else compressed,
+            )
+    return out
+
+
+def graph_critical_seconds(plan, node_s, hop_s) -> float:
+    """Critical-path seconds of a DAG plan (no queueing): longest
+    arrival→sink path over per-node denoise seconds and per-edge hop
+    seconds.  This replaces the linear sum — speculative branches overlap
+    the edge tail, so their work does not appear unless they *are* the
+    longest path."""
+    done = {}
+    for n in plan.nodes:
+        start = 0.0
+        for e in plan.preds[n.nid]:
+            start = max(start, done[e.src] + hop_s[(e.src, e.dst)])
+        done[n.nid] = start + node_s.get(n.nid, 0.0)
+    return done[plan.sink]
+
+
+def graph_ideal_seconds(plan, rtt_ms: float, *, bw_mbps: float = 20.0,
+                        compressed: Optional[bool] = None) -> float:
+    """Zero-queue critical-path latency of a DAG plan at nominal (jitter
+    free) segment costs — the graph analogue of the engines' per-arm ideal
+    baseline that ``wait_s`` measures against."""
+    return graph_critical_seconds(
+        plan,
+        graph_node_seconds(plan, rng=None),
+        graph_hop_seconds(plan, rtt_ms, bw_mbps=bw_mbps,
+                          compressed=compressed),
+    )
+
+
 def arm_latency(arm: Arm, plan=None, rtt_ms: float = 0.0,
                 rng: Optional[np.random.Generator] = None,
                 compressed: bool = False) -> LatencyBreakdown:

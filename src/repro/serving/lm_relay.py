@@ -7,16 +7,31 @@ continues from the shared token prefix.  Tokens play the role of the shared
 latent; the handoff transfers only the prefix (and optionally re-prefills the
 small model's KV cache).  The same LinUCB scheduler can pick (pair, s, pool);
 see examples/relay_lm.py.
+
+LM relays speak the same plan currency as the diffusion stack: the *token
+ladder* maps onto the segmented relay-program IR (``repro.core.program``)
+with segment slices as token ranges — :func:`lm_program` builds the plan,
+:func:`execute_lm_program` compiles it (``compile_plan``) and walks the
+canonical node order with per-node :class:`~repro.serving.obs.tracer.
+SpanTracer` spans on a logical one-second-per-token clock, and
+:func:`relay_decode` is now the two-segment special case routed through
+that coordinator (bit-identical tokens to the previous standalone path —
+see tests/test_lm_relay.py).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.program import (SEGMENT_NODE, Handoff, RelayProgram,
+                                RelaySegment, as_graph, compile_plan)
 from repro.models import transformer as tr
+
+#: replica pools of the LM relay roles (simulation bookkeeping only)
+LM_POOLS = {"large": "lm-large", "small": "lm-small"}
 
 
 def greedy_decode(
@@ -47,6 +62,91 @@ def greedy_decode(
     return seq
 
 
+def lm_program(s: int, total_tokens: int, *,
+               family: str = "LM",
+               pools: Dict[str, str] = LM_POOLS) -> RelayProgram:
+    """The LM prefix relay as a relay-program plan over the *token ladder*:
+    segment slices are token ranges (large decodes tokens [0, s), small
+    continues over [s, total)), and the handoff point is the token index —
+    the shared token prefix plays the latent's role, so ``sigma_out ==
+    sigma_in`` (an exact, zero-gap handoff) and the wire ships the prefix
+    uncompressed.  ``s == total_tokens`` degenerates to a single-segment
+    (large standalone) program."""
+    if not 0 < s <= total_tokens:
+        raise ValueError(f"need 0 < s <= total, got s={s}, total={total_tokens}")
+    segments = [RelaySegment("large", pools["large"], 0, s)]
+    handoffs = []
+    if s < total_tokens:
+        segments.append(RelaySegment("small", pools["small"], s, total_tokens))
+        handoffs.append(Handoff(sigma_out=float(s), sigma_in=float(s)))
+    return RelayProgram(family, tuple(segments), tuple(handoffs))
+
+
+def execute_lm_program(
+    program,
+    params: Dict[str, object],
+    cfgs: Dict[str, ArchConfig],
+    prompt: jnp.ndarray,
+    *,
+    tracer=None,
+    rid: int = 0,
+) -> Tuple[jnp.ndarray, dict]:
+    """Token-relay flow coordinator over the DAG IR: compile the plan
+    (either currency — a :class:`RelayProgram` or a chain
+    :class:`~repro.core.program.RelayGraph`) and fold the token sequence
+    through the canonical node order, each segment node greedily decoding
+    its token slice with its role's model (re-prefilling the shared
+    prefix), each handoff edge transferring the prefix.
+
+    ``tracer`` (a :class:`~repro.serving.obs.SpanTracer`) gets the same
+    queue/segment/hop span structure as the diffusion engines, on a logical
+    clock of one second per token (hops are zero-length — prefix transfer
+    is not modeled in logical time), so spans tile the request exactly.
+    Returns ``(sequence, info)``; info carries per-node token counts and
+    the total handoff bytes."""
+    plan = compile_plan(as_graph(program))
+    if any(n.kind != SEGMENT_NODE for n in plan.nodes):
+        raise ValueError("LM relay plans are segment chains — merge/select "
+                         "joins have no token-space semantics")
+    vocab = {cfgs[n.segment.model].vocab_size for n in plan.nodes}
+    if len(vocab) != 1:
+        raise ValueError(f"shared token space required, got vocabs {vocab}")
+    if tracer is not None:
+        tracer.start_request(rid, 0.0, -1, f"lm:{plan.graph.family}")
+    seq = prompt
+    t = 0.0
+    node_tokens: Dict[str, int] = {}
+    transfer_bytes = 0
+    for ni, node in enumerate(plan.nodes):
+        seg = node.segment
+        if tracer is not None:
+            tracer.enqueue(rid, node.nid, t)
+            tracer.start_segment(rid, node.nid, t, seg.pool, role=seg.model,
+                                 seg_idx=ni)
+        seq = greedy_decode(params[seg.model], cfgs[seg.model], seq, seg.steps)
+        t += float(seg.steps)
+        node_tokens[node.nid] = seg.steps
+        if tracer is not None:
+            tracer.end_segment(rid, t, name=node.nid, tokens=seg.steps)
+        for e in plan.succs[node.nid]:
+            if e.handoff is None:
+                continue
+            nbytes = int(seq.shape[0] * seq.shape[1] * 4)
+            transfer_bytes += nbytes
+            if tracer is not None:
+                tracer.hop(rid, f":{node.nid}->{e.dst}", t, t, nbytes,
+                           compressed=e.handoff.compress, pool=seg.pool)
+    if tracer is not None:
+        tracer.end_request(rid, t)
+    info = {
+        "node_tokens": node_tokens,
+        "total_tokens": sum(node_tokens.values()),
+        "transfer_bytes": transfer_bytes,
+        "shape_key": program.shape_key(),
+    }
+    return seq, info
+
+
 def relay_decode(
     large_params,
     large_cfg: ArchConfig,
@@ -55,16 +155,31 @@ def relay_decode(
     prompt: jnp.ndarray,
     s: int,
     total_tokens: int,
+    *,
+    tracer=None,
+    rid: int = 0,
 ) -> Tuple[jnp.ndarray, dict]:
     """Large model decodes the first ``s`` tokens; the small model re-prefills
-    the shared prefix and finishes.  Returns (sequence, info)."""
+    the shared prefix and finishes.  Returns (sequence, info).
+
+    Planned and executed through the DAG IR (:func:`lm_program` →
+    :func:`execute_lm_program`) — tokens are bit-identical to the previous
+    standalone two-call path."""
     assert large_cfg.vocab_size == small_cfg.vocab_size, "shared token space"
-    seq_l = greedy_decode(large_params, large_cfg, prompt, s)
-    seq = greedy_decode(small_params, small_cfg, seq_l, total_tokens - s)
+    prog = lm_program(s, total_tokens)
+    seq, run_info = execute_lm_program(
+        prog,
+        {"large": large_params, "small": small_params},
+        {"large": large_cfg, "small": small_cfg},
+        prompt,
+        tracer=tracer,
+        rid=rid,
+    )
     info = {
         "edge_tokens": s,
         "device_tokens": total_tokens - s,
-        "transfer_bytes": int(seq_l.shape[0] * seq_l.shape[1] * 4),
+        "transfer_bytes": int(prompt.shape[0] * (prompt.shape[1] + s) * 4),
+        **run_info,
     }
     return seq, info
 

@@ -61,24 +61,17 @@ def quality_metrics(x_gen: np.ndarray, prompt: synth.Prompt) -> Dict[str, float]
     return {"clip": clip, "ir": ir, "pick": pick, "aes": aes, "ocr": ocr}
 
 
-# historical API, now in repro.serving.obs.export — resolved lazily via
-# __getattr__ below so importing it still works but warns (the
-# distributed.compression idiom): telemetry export is observability, not a
-# quality oracle, and lives with the other exporters.
+# historical API, now in repro.serving.obs.export (telemetry export is
+# observability, not a quality oracle).  The lazy warning re-export shipped
+# for the deprecation window (the distributed.compression idiom); the window
+# is over, so resolving the old name is a hard error pointing at the new home.
 _MOVED = ("export_runtime_telemetry",)
 
 
 def __getattr__(name: str):
     if name in _MOVED:
-        import warnings
-
-        warnings.warn(
-            f"repro.serving.metrics.{name} moved to "
-            f"repro.serving.obs.export.{name}; this re-export will be "
-            f"removed",
-            DeprecationWarning, stacklevel=2,
+        raise ImportError(
+            f"repro.serving.metrics.{name} was removed after its deprecation "
+            f"cycle; import repro.serving.obs.export.{name} instead"
         )
-        import repro.serving.obs.export as obs_export
-
-        return getattr(obs_export, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

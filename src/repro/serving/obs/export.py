@@ -12,10 +12,20 @@ Chrome trace layout (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQ
   relay arrows edge → wire → device;
 * zero-length reissue markers become instant events (``ph: "i"``).
 
+DAG programs add a ``relay`` control process and split the request into
+*per-branch flow tracks*: the trunk keeps the integer request id, each
+named branch gets its own flow (``id`` = ``"<rid>/<branch>"``) that starts
+at the branch's first span and terminates on the merge/select join span —
+so Perfetto draws the fan-out and the join arrows separately per branch.
+Branch-point markers become instant events (``ph: "i"``, cat ``branch``)
+and join-resolution spans become ``X`` events (cat ``join``) carrying the
+select outcome (winner, accepted, deviation vs bound) in ``args``.
+
 :func:`validate_chrome_trace` is the schema gate CI runs on emitted
 traces: required keys, non-negative durations, events sorted by ``ts``,
-and every flow id resolving (one ``s``, one terminating ``f``, ``f`` not
-before ``s``).
+every flow id resolving (one ``s``, one terminating ``f``, ``f`` not
+before ``s``), instant events carrying a scope, join events carrying
+their outcome, and every branch flow anchored to a trunk flow.
 
 Also home to :func:`export_runtime_telemetry` (moved here from
 ``repro.serving.metrics``, which keeps a deprecated re-export): the
@@ -26,20 +36,23 @@ from __future__ import annotations
 import json
 from typing import Dict, List, Optional
 
-from repro.serving.obs.tracer import (HOP, QUEUE, REISSUE, SEGMENT,
-                                      SpanTracer)
+from repro.serving.obs.tracer import (BRANCH, HOP, JOIN, QUEUE, REISSUE,
+                                      SEGMENT, SpanTracer)
 
 _QUEUE_TID = 999  # per-pool aggregator-wait track
 _US = 1e6  # simulated seconds → trace microseconds
 
 
 def _pids(tracer: SpanTracer) -> Dict[str, int]:
-    """Stable pool → pid mapping (sorted pools, then the wire process)."""
+    """Stable pool → pid mapping (sorted pools, then the wire process,
+    then — only when DAG spans exist — the relay control process)."""
     pools = sorted({
         s.pool for s in tracer.spans() if s.pool is not None
     })
     pids = {p: i + 1 for i, p in enumerate(pools)}
     pids["wire"] = len(pools) + 1
+    if any(s.kind in (BRANCH, JOIN) for s in tracer.spans()):
+        pids["relay"] = len(pools) + 2
     return pids
 
 
@@ -54,7 +67,10 @@ def to_chrome_trace(tracer: SpanTracer,
                        "args": {"name": pool if pool != "wire"
                                 else "wire (latent handoffs)"}})
     for tr in tracer.requests.values():
-        flow: List[dict] = []  # (pid, tid, ts) anchors for this request
+        # (pid, tid, ts) flow anchors: the trunk keeps the legacy integer
+        # request id; each DAG branch threads its own "<rid>/<branch>" flow
+        tracks: Dict[object, List[dict]] = {tr.rid: []}
+        closed: set = set()
         for s in tr.spans:
             if s.kind == SEGMENT:
                 pid = pids[s.pool]
@@ -64,6 +80,15 @@ def to_chrome_trace(tracer: SpanTracer,
             elif s.kind == QUEUE:
                 pid = pids[s.pool] if s.pool is not None else 0
                 tid = _QUEUE_TID
+            elif s.kind == JOIN:
+                pid, tid = pids["relay"], 0
+            elif s.kind == BRANCH:
+                events.append({
+                    "ph": "i", "name": s.name, "cat": "branch",
+                    "pid": pids["relay"], "tid": 0, "ts": s.t0 * _US,
+                    "s": "p", "args": {"rid": s.rid, **s.meta},
+                })
+                continue
             else:  # REISSUE marker
                 pid = pids.get(s.pool, 0) if s.pool else 0
                 events.append({
@@ -79,18 +104,40 @@ def to_chrome_trace(tracer: SpanTracer,
                 "dur": max(s.dur, 0.0) * _US,
                 "args": {"rid": s.rid, "arm": tr.arm_idx, **s.meta},
             })
-            if s.kind != QUEUE:
-                flow.append({"pid": pid, "tid": tid, "ts": ts})
-        # requests as flows: arrows threading the segment/hop spans
-        for i, anchor in enumerate(flow):
-            ph = "s" if i == 0 else ("f" if i == len(flow) - 1 else "t")
-            if len(flow) == 1:
-                break  # single-span request: no arrow to draw
-            ev = {"ph": ph, "name": "request", "cat": "relay",
-                  "id": tr.rid, **anchor}
-            if ph == "f":
-                ev["bp"] = "e"  # bind to the enclosing slice
-            events.append(ev)
+            if s.kind == QUEUE:
+                continue
+            anchor = {"pid": pid, "tid": tid, "ts": ts}
+            if s.kind == JOIN:
+                # the join resolves the fan-out: terminate every branch
+                # flow still open on the join anchor, and thread the trunk.
+                # Anchor at the *resolution* instant t1 — the winner's
+                # arrival t0 can precede a slow losing branch's dispatch,
+                # but resolution bounds every branch span from above.
+                anchor = {"pid": pid, "tid": tid, "ts": s.t1 * _US}
+                for key, anchors in tracks.items():
+                    if key == tr.rid or key in closed or not anchors:
+                        continue
+                    anchors.append(anchor)
+                    closed.add(key)
+                tracks[tr.rid].append(anchor)
+                continue
+            branch = s.meta.get("branch")
+            key = tr.rid if branch is None else f"{tr.rid}/{branch}"
+            if key in closed:
+                continue  # late span of a resolved-away branch: drawn, unthreaded
+            tracks.setdefault(key, []).append(anchor)
+        # requests as flows: arrows threading each track's anchors
+        for key in sorted(tracks, key=str):
+            flow = tracks[key]
+            if len(flow) < 2:
+                continue  # single-span track: no arrow to draw
+            for i, anchor in enumerate(flow):
+                ph = "s" if i == 0 else ("f" if i == len(flow) - 1 else "t")
+                ev = {"ph": ph, "name": "request", "cat": "relay",
+                      "id": key, **anchor}
+                if ph == "f":
+                    ev["bp"] = "e"  # bind to the enclosing slice
+                events.append(ev)
     events.sort(key=lambda e: (e["ts"], e.get("ph") != "M"))
     trace = {"traceEvents": events, "displayTimeUnit": "ms"}
     if meta:
@@ -136,16 +183,19 @@ _REQUIRED = {"ph", "name", "pid", "tid", "ts"}
 def validate_chrome_trace(trace: dict) -> List[str]:
     """Validate an emitted Chrome trace object; returns a list of schema
     violations (empty ⇒ valid).  Checked: top-level shape, required keys
-    per event, non-negative ``ts``/``dur``, events sorted by ``ts``, and
-    flow resolution (every flow id has exactly one ``s`` and one ``f``,
-    with the finish not before the start)."""
+    per event, non-negative ``ts``/``dur``, events sorted by ``ts``, flow
+    resolution (every flow id — integer trunk or ``"rid/branch"`` — has
+    exactly one ``s`` and one ``f``, with the finish not before the
+    start), instant events carrying a scope, join events carrying their
+    resolution outcome, and every branch flow anchored to a trunk flow of
+    the same request."""
     errors: List[str] = []
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         return ["top-level object must carry a traceEvents list"]
     events = trace["traceEvents"]
     if not isinstance(events, list) or not events:
         return ["traceEvents must be a non-empty list"]
-    flows: Dict[int, Dict[str, list]] = {}
+    flows: Dict[object, Dict[str, list]] = {}
     last_ts = None
     for i, ev in enumerate(events):
         missing = _REQUIRED - set(ev)
@@ -162,19 +212,28 @@ def validate_chrome_trace(trace: dict) -> List[str]:
         if ev["ph"] == "X":
             if "dur" not in ev or ev["dur"] < 0:
                 errors.append(f"event {i} ('X') needs a non-negative dur")
+            if ev.get("cat") == "join" and "winner" not in ev.get("args", {}):
+                errors.append(f"event {i} (join) needs args.winner")
+        elif ev["ph"] == "i":
+            if "s" not in ev:
+                errors.append(f"event {i} ('i') needs an instant scope 's'")
         elif ev["ph"] in ("s", "t", "f"):
             if "id" not in ev:
                 errors.append(f"event {i} flow phase {ev['ph']!r} needs id")
             else:
                 flows.setdefault(ev["id"], {"s": [], "t": [], "f": []})[
                     ev["ph"]].append(ts)
-    for fid, phases in sorted(flows.items()):
+    for fid, phases in sorted(flows.items(), key=lambda kv: str(kv[0])):
         if len(phases["s"]) != 1:
             errors.append(f"flow {fid}: {len(phases['s'])} starts (need 1)")
         if len(phases["f"]) != 1:
             errors.append(f"flow {fid}: {len(phases['f'])} finishes (need 1)")
         if phases["s"] and phases["f"] and phases["f"][0] < phases["s"][0]:
             errors.append(f"flow {fid}: finish before start")
+        if isinstance(fid, str) and "/" in fid:
+            trunk = fid.split("/", 1)[0]
+            if not any(str(other) == trunk for other in flows):
+                errors.append(f"branch flow {fid}: no trunk flow {trunk}")
     return errors
 
 

@@ -35,6 +35,8 @@ SEGMENT = "segment"
 HOP = "hop"
 QUEUE = "queue"
 REISSUE = "reissue"
+BRANCH = "branch"  # zero-length fan-out marker (DAG programs)
+JOIN = "join"      # merge/select resolution span (DAG programs)
 
 
 @dataclass(slots=True)
@@ -87,23 +89,37 @@ class RequestTrace:
         return None if self.done is None else self.done - self.arrival
 
     def attributed_s(self) -> float:
-        """Sum of queue + segment + hop span durations (reissue markers are
-        zero-length and contribute nothing)."""
-        return sum(s.dur for s in self.spans)
+        """Sum of queue + segment + hop + join span durations along the
+        request's *attribution path* — spans marked ``offpath`` (losing or
+        non-critical DAG branches) are excluded, so the sum still tiles
+        arrival → done exactly (markers are zero-length and contribute
+        nothing)."""
+        return sum(s.dur for s in self.spans if not s.meta.get("offpath"))
 
 
 class SpanTracer:
     """Collects :class:`RequestTrace` objects from either serving runtime.
 
-    A request executes its program strictly sequentially (one segment at a
-    time), so at most one queue span and one segment span are open per rid
-    at any moment — the tracer tracks those and closes them as the engine
-    reports progress."""
+    Linear programs execute strictly sequentially (one segment at a time);
+    DAG programs may hold several branch segments open concurrently for
+    the same rid, so open queue/segment spans are keyed by
+    ``(rid, segment name)``.  ``end_segment`` without a name closes the
+    sole open span of the rid — the linear engines' calling convention —
+    while the DAG paths pass the node id explicitly."""
 
     def __init__(self):
         self.requests: Dict[int, RequestTrace] = {}
-        self._open_queue: Dict[int, Span] = {}
-        self._open_seg: Dict[int, Span] = {}
+        self._open_queue: Dict[Tuple[int, str], Span] = {}
+        self._open_seg: Dict[Tuple[int, str], Span] = {}
+        self._offpath: Dict[int, set] = {}  # rid → branches off the path
+
+    def _append(self, rid: int, span: Span) -> None:
+        """Append a span, flagging it offpath when its branch was already
+        resolved away (a losing select branch can finish *after* the join
+        resolves — its late spans must not re-enter the attribution)."""
+        if span.meta.get("branch") in self._offpath.get(rid, ()):
+            span.meta["offpath"] = True
+        self.requests[rid].spans.append(span)
 
     # ------------------------------------------------------------------
     # recording (engine-facing)
@@ -114,43 +130,96 @@ class SpanTracer:
         """Open a request's trace envelope at decision time ``t``."""
         self.requests[rid] = RequestTrace(rid, t, arm_idx, arm_label)
 
-    def enqueue(self, rid: int, seg_name: str, t: float) -> None:
+    def enqueue(self, rid: int, seg_name: str, t: float,
+                branch: Optional[str] = None) -> None:
         """The segment's work item entered its pool queue at ``t``."""
-        self._open_queue[rid] = Span(rid, f"queue:{seg_name}", QUEUE, t, t)
+        meta = {"branch": branch} if branch else {}
+        self._open_queue[(rid, seg_name)] = Span(
+            rid, f"queue:{seg_name}", QUEUE, t, t, None, meta)
 
     def start_segment(self, rid: int, seg_name: str, t: float, pool: str,
                       **meta) -> None:
         """The segment's batch dispatched at ``t`` — closes the pending
         queue span and opens the service span."""
-        q = self._open_queue.pop(rid, None)
+        q = self._open_queue.pop((rid, seg_name), None)
+        meta = {k: v for k, v in meta.items() if v is not None}
         if q is not None:
             q.t1 = t
             q.pool = pool
-            self.requests[rid].spans.append(q)
-        self._open_seg[rid] = Span(rid, seg_name, SEGMENT, t, t, pool,
-                                   dict(meta))
+            self._append(rid, q)
+            # the service span belongs to the same DAG branch its queue
+            # span was enqueued on (the batching dispatcher doesn't know)
+            if "branch" in q.meta and "branch" not in meta:
+                meta["branch"] = q.meta["branch"]
+        self._open_seg[(rid, seg_name)] = Span(rid, seg_name, SEGMENT, t, t,
+                                               pool, meta)
 
-    def end_segment(self, rid: int, t: float, **meta) -> None:
-        """Close the open service span at ``t`` (no-op if none open)."""
-        s = self._open_seg.pop(rid, None)
+    def end_segment(self, rid: int, t: float, name: Optional[str] = None,
+                    **meta) -> None:
+        """Close an open service span at ``t`` (no-op if none open).
+        Without ``name`` the rid's sole open span closes — the linear
+        engines' convention; DAG callers name the node explicitly."""
+        if name is None:
+            keys = [k for k in self._open_seg if k[0] == rid]
+            if not keys:
+                return
+            name = keys[0][1]
+        s = self._open_seg.pop((rid, name), None)
         if s is not None:
             s.t1 = t
             s.meta.update(meta)
-            self.requests[rid].spans.append(s)
+            self._append(rid, s)
 
-    def hop(self, rid: int, hop_idx: int, t0: float, t1: float,
-            nbytes: int, compressed: bool, pool: Optional[str] = None) -> None:
+    def hop(self, rid: int, hop_idx, t0: float, t1: float,
+            nbytes: int, compressed: bool, pool: Optional[str] = None,
+            branch: Optional[str] = None) -> None:
         """Record one latent handoff: wire window [t0, t1] and payload
-        bytes, attributed to the sending pool."""
-        self.requests[rid].spans.append(Span(
-            rid, f"hop{hop_idx}", HOP, t0, t1, pool,
-            {"bytes": nbytes, "compressed": compressed},
+        bytes, attributed to the sending pool.  ``hop_idx`` is the hop's
+        ordinal for linear programs or a ``src->dst`` edge label for DAG
+        programs; ``branch`` tags hops feeding a named DAG branch."""
+        meta = {"bytes": nbytes, "compressed": compressed}
+        if branch:
+            meta["branch"] = branch
+        self._append(rid, Span(
+            rid, f"hop{hop_idx}", HOP, t0, t1, pool, meta,
         ))
+
+    def branch_point(self, rid: int, name: str, t: float,
+                     branches: Tuple[str, ...]) -> None:
+        """Zero-length marker at a DAG fan-out: node ``name`` handed its
+        latent to several branches at ``t``."""
+        self._append(rid, Span(
+            rid, f"branch:{name}", BRANCH, t, t, None,
+            {"branches": list(branches)},
+        ))
+
+    def join(self, rid: int, name: str, t0: float, t1: float,
+             **meta) -> None:
+        """Join-resolution span of a DAG merge/select node: from the
+        winning branch's latent arrival ``t0`` to the resolution instant
+        ``t1`` (the decision for a select, the slower arrival for a merge).
+        Meta carries the outcome — winner branch, accepted flag, measured
+        vs bound deviation — so trace consumers can audit Eq. 1 gating."""
+        self._append(rid, Span(
+            rid, f"join:{name}", JOIN, t0, t1, None,
+            {k: v for k, v in meta.items() if v is not None},
+        ))
+
+    def mark_offpath(self, rid: int, branch: str) -> None:
+        """Flag every span of ``branch`` as off the attribution path (the
+        losing select branch, or a merge input that wasn't the critical
+        one) so :meth:`RequestTrace.attributed_s` keeps tiling t_total.
+        Sticky: spans of the branch appended later (a losing branch still
+        in flight at resolution) are flagged on append."""
+        self._offpath.setdefault(rid, set()).add(branch)
+        for s in self.requests[rid].spans:
+            if s.meta.get("branch") == branch:
+                s.meta["offpath"] = True
 
     def reissue(self, rid: int, t: float, partial: bool) -> None:
         """Straggler detector tripped for this request (its own draw
         exceeded the threshold) — zero-length marker at detection time."""
-        self.requests[rid].spans.append(Span(
+        self._append(rid, Span(
             rid, "reissue", REISSUE, t, t, None, {"partial": partial},
         ))
 

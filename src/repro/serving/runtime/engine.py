@@ -81,7 +81,9 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.context import Request, context_vector
-from repro.core.program import phase_name
+from repro.core.program import (MERGE_NODE, SEGMENT_NODE, SELECT_NODE,
+                                RelayGraph, compile_plan, phase_name,
+                                select_outcome)
 from repro.serving import latency as lat
 from repro.serving.arms import ARMS, Arm, pools_used
 from repro.serving.context import (aggregate_occupancy, backlog_horizon,
@@ -164,6 +166,24 @@ class _Pending:
     ctx: np.ndarray
     occ: Dict[str, float]  # decision-time occupancy (reward's l_dev)
     ideal_s: float  # zero-queue latency, for wait accounting
+
+
+@dataclass
+class _DagReq:
+    """Per-request DAG execution state (graph arms only).
+
+    ``decisions`` are the request's select outcomes, resolved at admission
+    via the shared :func:`repro.core.program.select_outcome` (pure in
+    request + plan + transport, so the sequential engine replays them
+    identically); ``skip`` the nodes those accepts cancel — they never
+    spawn work items.  ``joins`` collects per-join predecessor arrival
+    times; ``gates`` the completion instants of select gate nodes."""
+
+    decisions: Dict[str, tuple]
+    skip: frozenset
+    base_pct: float
+    joins: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    gates: Dict[str, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -365,8 +385,47 @@ class ContinuousRuntime:
         self._q_penalty: List[Optional[float]] = [None] * na
         self._occ_keys: List[Tuple[str, ...]] = [()] * na
         self._arm_pool_mat = np.zeros((na, len(names)), bool)
+        # DAG arms: compiled plan (None → linear fast path untouched) and
+        # gate-node → select-node map per arm
+        self._plan = [None] * na
+        self._gate_map: List[Dict[str, str]] = [{}] * na
         for a in self.arms:
             i, prog = a.idx, a.program
+            if isinstance(prog, RelayGraph):
+                plan = compile_plan(prog)
+                if plan.is_chain:
+                    # chain graphs normalize to the linear program and take
+                    # the unmodified hot path below
+                    prog = plan.linear_program()
+                else:
+                    self._plan[i] = plan
+                    self._gate_map[i] = {
+                        s.gate: nid for nid, s in plan.selects.items()
+                        if s.gate is not None
+                    }
+                    # seg_idx indexes the canonical node order; join nodes
+                    # hold a (nid, None, 0) placeholder — they never spawn
+                    # pool work, but WorkItem.seg_idx stays positional
+                    self._seg_info[i] = tuple(
+                        (n.nid,
+                         n.segment.pool if n.kind == SEGMENT_NODE else None,
+                         n.segment.steps if n.kind == SEGMENT_NODE else 0)
+                        for n in plan.nodes
+                    )
+                    self._arm_hops[i] = prog.n_hops
+                    self._arm_is_relay[i] = prog.is_relay
+                    self._wire_s[i] = lat.wire_seconds(
+                        a.family, tcfg.bw_mbps, tcfg.compress
+                    )
+                    # _q_penalty stays None: DAG quality is per-request
+                    # (select decisions) — priced at completion by the
+                    # shared serving.engine.graph_quality
+                    self._occ_keys[i] = tuple(
+                        pool_key(p) for p in pools_used(a)
+                    )
+                    for p in pools_used(a):
+                        self._arm_pool_mat[i, pool_j[p]] = True
+                    continue
             self._seg_info[i] = tuple(
                 (phase_name(prog, k), seg.pool, seg.steps)
                 for k, seg in enumerate(prog.segments)
@@ -406,12 +465,15 @@ class ContinuousRuntime:
         draining it — the stepping entry point.  Seeds the failure
         schedule and the streaming-arrival window; further requests may
         arrive later via :meth:`inject` (the fleet router path)."""
-        from repro.serving.engine import Record, score_and_update
+        from repro.serving.engine import (Record, graph_quality,
+                                          score_and_update)
 
         self._Record, self._score = Record, score_and_update
+        self._graph_quality = graph_quality
         self._setup_pools()
         self._setup_arms()
         self.pending: Dict[int, _Pending] = {}
+        self._dag: Dict[int, _DagReq] = {}
         self.records: List[Record] = []
         self._batch_seq = 0
         self._inflight: Dict[int, _Batch] = {}
@@ -566,10 +628,33 @@ class ContinuousRuntime:
             )
         arm_idx = self.policy.select(ctx, avail)
 
-        # zero-queue latency: per-segment denoise + per-hop transfer
-        ideal = self._ideal_base[arm_idx] + self._arm_hops[arm_idx] * (
-            req.rtt_ms / 1000.0 + self._wire_s[arm_idx]
-        )
+        plan = self._plan[arm_idx]
+        if plan is None:
+            # zero-queue latency: per-segment denoise + per-hop transfer
+            ideal = self._ideal_base[arm_idx] + self._arm_hops[arm_idx] * (
+                req.rtt_ms / 1000.0 + self._wire_s[arm_idx]
+            )
+        else:
+            # DAG arm: zero-queue critical path, plus the request's select
+            # decisions (clock- and RNG-free) resolved once at admission
+            tcfg = self.transport.cfg
+            ideal = lat.graph_ideal_seconds(
+                plan, req.rtt_ms, bw_mbps=tcfg.bw_mbps,
+                compressed=tcfg.compress,
+            )
+            base_pct = (
+                self.transport.handoff_error(plan.graph.family) * 100.0
+            )
+            decisions = {
+                nid: select_outcome(plan, nid, req.complexity, base_pct)
+                for nid in plan.selects
+            }
+            skip: set = set()
+            for nid, (accepted, _, _) in decisions.items():
+                if accepted:
+                    skip |= plan.selects[nid].skip_on_accept
+            self._dag[req.rid] = _DagReq(decisions, frozenset(skip),
+                                         base_pct)
         self.pending[req.rid] = _Pending(req, arm_idx, ctx, occ, ideal)
         item = self._item(req, arm_idx, 0)
         if self.rt.trace:
@@ -888,6 +973,11 @@ class ContinuousRuntime:
             tracer = self.tracer
             first = items[0]
             arm_idx = first.arm_idx
+            plan = self._plan[arm_idx]
+            if plan is not None:
+                self._graph_batch_done(b, items, plan, now)
+                self._dispatch(b.pool, now)
+                return
             if first.seg_idx < len(self._seg_info[arm_idx]) - 1:
                 # hop: the latents ship to the next segment's pool
                 fam = self.arms[arm_idx].family
@@ -943,11 +1033,188 @@ class ContinuousRuntime:
                     ))
         self._dispatch(b.pool, now)
 
-    def _on_segment_ready(self, prev_item: WorkItem, now: float) -> None:
-        """A hop's latent transfer landed: enqueue the next segment."""
+    def _on_segment_ready(self, payload, now: float) -> None:
+        """A hop's latent transfer landed: enqueue the next segment.
+        Linear arms carry the *previous* segment's item (the next one is
+        implied); DAG edges carry ``(next item, src nid)`` tuples so the
+        landing knows which graph edge it traversed."""
+        if isinstance(payload, tuple):
+            self._graph_ready(*payload, now=now)
+            return
+        prev_item = payload
         item = self._item(prev_item.req, prev_item.arm_idx,
                           prev_item.seg_idx + 1)
         if self.rt.trace:
             self.tracer.enqueue(item.rid, item.phase, now)
         self.pools[item.pool].agg.push(item, now)
         self._dispatch(item.pool, now)
+
+    # ------------------------------------------------------------------
+    # DAG (RelayGraph) arm execution
+    # ------------------------------------------------------------------
+
+    def _graph_batch_done(self, b: _Batch, items: List[WorkItem], plan,
+                          now: float) -> None:
+        """Per-item tail of a DAG arm's batch: close spans, record gate
+        completions, fan the latent out along live successor edges.  A
+        batch can mix members of still-pending and already-completed
+        requests (a rejected speculation's branch finishing after its
+        reference resolved the select), so each item re-checks its own
+        DAG state."""
+        trace = self.rt.trace
+        tracer = self.tracer
+        arm_idx = items[0].arm_idx
+        gate_map = self._gate_map[arm_idx]
+        for it in items:
+            nid = plan.order[it.seg_idx]
+            if trace:
+                tracer.end_segment(it.rid, now, name=nid)
+            st = self._dag.get(it.rid)
+            if st is None:
+                continue  # request completed while this branch ran
+            sel_nid = gate_map.get(nid)
+            if sel_nid is not None:
+                # the gate's completion is the select's decision instant
+                st.gates[sel_nid] = now
+                self._try_join(it, plan, st, sel_nid, now)
+                if it.rid not in self._dag:
+                    continue  # the join resolved and completed the request
+            self._graph_fanout(it, plan, st, nid, now)
+
+    def _graph_fanout(self, it: WorkItem, plan, st: _DagReq, nid: str,
+                      now: float) -> None:
+        """Ship node ``nid``'s output along its live (non-cancelled)
+        successor edges: handoff edges pay RTT + wire serialization and
+        emit hop spans; plain edges (same-pool continuation, join inputs)
+        land immediately."""
+        arm_idx = it.arm_idx
+        node = plan.nodes[plan.index[nid]]
+        live = [e for e in plan.succs[nid] if e.dst not in st.skip]
+        trace = self.rt.trace
+        if trace and len(live) > 1:
+            self.tracer.branch_point(it.rid, nid, now, tuple(
+                plan.nodes[plan.index[e.dst]].branch or e.dst for e in live
+            ))
+        wire_s = self._wire_s[arm_idx]
+        compress = self.transport.cfg.compress
+        src_pool = node.segment.pool if node.kind == SEGMENT_NODE else None
+        push = self.evq.push
+        for e in live:
+            if e.handoff is not None:
+                tsec = it.req.rtt_ms / 1000.0 + wire_s
+                nbytes = self.transport.wire_bytes(self.arms[arm_idx].family)
+                if src_pool is not None:
+                    self.telemetry.record_transfer(src_pool, nbytes,
+                                                   n_items=1)
+                if trace:
+                    dst = plan.nodes[plan.index[e.dst]]
+                    self.tracer.hop(
+                        it.rid, f":{nid}->{e.dst}", now, now + tsec, nbytes,
+                        compressed=compress, pool=src_pool,
+                        branch=dst.branch or node.branch,
+                    )
+            else:
+                tsec = 0.0
+            nxt = self._item(it.req, arm_idx, plan.index[e.dst])
+            push(now + tsec, DEVICE_READY, (nxt, nid))
+
+    def _graph_ready(self, item: WorkItem, src: str, *, now: float) -> None:
+        """A DAG edge landed: enqueue a segment node's work item, or
+        record a join input and try to resolve the join."""
+        st = self._dag.get(item.rid)
+        if st is None:
+            return  # request completed while the latent was in flight
+        plan = self._plan[item.arm_idx]
+        node = plan.nodes[item.seg_idx]
+        if node.kind == SEGMENT_NODE:
+            if self.rt.trace:
+                self.tracer.enqueue(item.rid, node.nid, now,
+                                    branch=node.branch)
+            self.pools[item.pool].agg.push(item, now)
+            self._dispatch(item.pool, now)
+            return
+        st.joins.setdefault(node.nid, {})[src] = now
+        self._try_join(item, plan, st, node.nid, now)
+
+    def _try_join(self, it: WorkItem, plan, st: _DagReq, nid: str,
+                  now: float) -> None:
+        """Resolve a join node once its required inputs are in.
+
+        Merge: every live predecessor's latent must have arrived —
+        completion is the slower branch (this event).  Select: an accepted
+        speculation needs the candidate latent *and* the gate's decision
+        (completion is the later of the two); a rejection needs only the
+        reference latent — the candidate branch is ignored on arrival,
+        exactly like the sequential engine.  Resolution always happens at
+        ``now`` (the last required input is the event being handled)."""
+        node = plan.nodes[plan.index[nid]]
+        arr = st.joins.get(nid, {})
+        trace = self.rt.trace
+        if node.kind == MERGE_NODE:
+            need = [e.src for e in plan.preds[nid] if e.src not in st.skip]
+            if any(s not in arr for s in need):
+                return
+            winner = max(need, key=lambda s: (arr[s], s))
+            t0 = arr[winner]
+            if trace:
+                for s in need:
+                    b = plan.nodes[plan.index[s]].branch
+                    if s != winner and b:
+                        self.tracer.mark_offpath(it.rid, b)
+                self.tracer.join(
+                    it.rid, nid, t0, now, kind="merge",
+                    winner=plan.nodes[plan.index[winner]].branch or winner,
+                    inputs=sorted(arr),
+                )
+        else:  # SELECT_NODE
+            sel = plan.selects[nid]
+            accepted, dev, bound = st.decisions[nid]
+            cand = sel.candidates[0]
+            if accepted:
+                if cand not in arr or nid not in st.gates:
+                    return
+                arrival = arr[cand]
+                winner, loser = cand, sel.reference
+            else:
+                if sel.reference not in arr:
+                    return
+                arrival = arr[sel.reference]
+                winner, loser = sel.reference, cand
+            if trace:
+                b_lose = plan.nodes[plan.index[loser]].branch
+                if b_lose:
+                    self.tracer.mark_offpath(it.rid, b_lose)
+                self.tracer.join(
+                    it.rid, nid, arrival, now, kind="select",
+                    accepted=accepted, deviation_pct=dev, bound_pct=bound,
+                    winner=plan.nodes[plan.index[winner]].branch or winner,
+                )
+        if nid == plan.sink:
+            self._graph_complete(it, plan, st, now)
+        else:
+            self._graph_fanout(it, plan, st, nid, now)
+
+    def _graph_complete(self, it: WorkItem, plan, st: _DagReq,
+                        now: float) -> None:
+        """Emit the Record of a finished DAG request — the linear
+        completion tail with the shared graph quality pricing."""
+        rid = it.rid
+        del self._dag[rid]
+        pend = self.pending.pop(rid)
+        t_total = now - pend.req.arrival
+        q = self._graph_quality(
+            self.transport, plan, self.arms[pend.arm_idx], st.decisions,
+            st.base_pct, self.qt[pend.req.rid, pend.arm_idx],
+        )
+        occ = pend.occ
+        l_dev = max(occ[k] for k in self._occ_keys[pend.arm_idx])
+        r_report = self._score(
+            self.policy, pend.arm_idx, pend.ctx, q, t_total, l_dev,
+            dynamic_reward=self.dynamic_reward, arms=self.arms,
+        )
+        if self.rt.trace:
+            self.tracer.end_request(rid, now)
+        self.records.append(self._Record(
+            pend.req.rid, pend.arm_idx, r_report, t_total, q, pend.ctx,
+            max(0.0, t_total - pend.ideal_s),
+        ))

@@ -137,3 +137,21 @@ class HandoffTransport:
             if k in out:
                 out[k] = out[k] - penalty
         return out
+
+    def deviation_quality_delta(self, family: Optional[str],
+                                quality: Dict[str, float],
+                                dev_pct: float) -> Dict[str, float]:
+        """Quality delta priced at an *explicit* Eq. 1 deviation (percent)
+        instead of the per-family wire constant — the DAG select path,
+        where the surviving handoff's deviation is request-dependent (an
+        accepted speculation carries its modeled post-verification
+        deviation; a rejected one degenerates to the fixed arm's
+        ``quality_delta``).  Same subtractive clip/ir semantics."""
+        if family is None or not self.cfg.compress:
+            return quality
+        penalty = self.cfg.quality_sensitivity * dev_pct / 100.0
+        out = dict(quality)
+        for k in ("clip", "ir"):
+            if k in out:
+                out[k] = out[k] - penalty
+        return out

@@ -18,8 +18,13 @@ def synthetic_quality_table(reqs, arms=None) -> np.ndarray:
     qt = np.empty((len(reqs), len(arms)), dtype=object)
     for i, r in enumerate(reqs):
         for a in arms:
-            # steps run above the smallest model scale (edge + mid segments)
-            big_steps = sum(s.steps for s in a.program.segments[:-1])
+            # steps run above the smallest model scale (edge + mid
+            # segments); model-keyed rather than positional so DAG programs
+            # count their large/mid work wherever it sits in the canonical
+            # order — identical to segments[:-1] for every linear arm
+            big_steps = sum(
+                s.steps for s in a.program.segments if s.model != "small"
+            )
             base = 0.55 + 0.1 * min(big_steps, 25) / 25.0
             ocr = (0.75 if a.family == "F3" else 0.08) if r.wants_text else 0.0
             qt[i, a.idx] = {"clip": base, "ir": base, "pick": 0.2 + 0.03 * base,

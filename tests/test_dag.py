@@ -1,0 +1,452 @@
+"""Property suite for DAG-structured relay programs.
+
+The contract the graph IR ships under:
+
+* a *chain* graph is the linear program, bit-for-bit — same latents through
+  both flow coordinators (``execute_graph`` vs ``execute_program``) and the
+  same executor pipelines (chain graphs normalize to their linear program,
+  so the shape cache never grows);
+* compilation is *canonical* — topologically equivalent declarations
+  (seeded node/edge shuffles) compile to the identical plan, shape key and
+  bit-identical latents;
+* Select/Merge semantics are exact — a rejected speculation equals the
+  reference chain, an accepted one equals the speculative chain, a merge is
+  the branch average, all bitwise;
+* both serving runtimes resolve every speculation identically — same arm
+  decisions, quality dicts, accept/reject outcomes, deviations and fault
+  counters under a deterministic CyclePolicy, with spans tiling t_total on
+  both engines;
+* the Eq. 1 speculation model is a pure, monotone function of its inputs.
+"""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.program import (GraphEdge, GraphNode, RelayGraph,
+                                SPEC_BOUND_REL, SPEC_DECAY, SPEC_GAMMA,
+                                as_graph, compile_plan, linear_graph,
+                                select_bound_pct, select_outcome,
+                                speculative_deviation_pct)
+from repro.core.relay import execute_graph, execute_program
+from repro.diffusion.families import SPECS
+from repro.serving.arms import (ARMS, build_action_space, cascade_program,
+                                dag_action_space, ensemble_program,
+                                relay_program, speculative_program)
+from repro.serving.engine import ServingEngine, SimConfig, make_requests
+from repro.serving.executor import Executor
+from repro.serving.obs import attribution_residual
+from repro.serving.runtime import RuntimeConfig
+from repro.serving.workload import CyclePolicy, synthetic_quality_table
+
+
+def _toy_fn(params, x, t, cond):
+    return 0.5 * x + 0.05 * jnp.tanh(x)
+
+
+def _toy_mid_fn(params, x, t, cond):
+    return 0.45 * x + 0.05 * jnp.tanh(x)
+
+
+MODELS = {"large": (_toy_fn, None), "mid": (_toy_mid_fn, None),
+          "small": (_toy_fn, None)}
+
+
+def _toy_families():
+    return {
+        name: SimpleNamespace(
+            spec=SPECS[name](), large_fn=_toy_fn, small_fn=_toy_fn,
+            large_params=None, small_params=None,
+            mid_fn=_toy_mid_fn, mid_params=None,
+        )
+        for name in ("XL", "F3")
+    }
+
+
+def _latent(spec, seed, n=2):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,) + spec.latent_shape)
+
+
+# ---------------------------------------------------------------------------
+# 1. chain graphs ≡ linear programs, bit-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prog_fn", [
+    lambda: relay_program("XL", 10),
+    lambda: relay_program("F3", 25),
+    lambda: cascade_program("XL", 10, 15),
+])
+def test_chain_graph_equals_linear_program_bitwise(prog_fn):
+    """execute_graph over the bridged chain performs the identical op
+    sequence as execute_program — latents, wire bytes and deviation all
+    equal, across a seeded sweep of inputs."""
+    prog = prog_fn()
+    spec = SPECS[prog.family]()
+    graph = linear_graph(prog)
+    assert compile_plan(graph).is_chain
+    assert graph.shape_key() == prog.shape_key()
+    for seed in (0, 1, 2):
+        x = _latent(spec, seed)
+        lin, info_l = execute_program(spec, prog, MODELS, x, None)
+        dag, info_g = execute_graph(spec, graph, MODELS, x, None)
+        np.testing.assert_array_equal(np.asarray(dag), np.asarray(lin))
+        assert info_g["transfer_bytes"] == info_l["transfer_bytes"]
+        assert float(info_g["handoff_deviation_pct"]) == \
+            float(info_l["handoff_deviation_pct"])
+        assert info_g["joins"] == []
+
+
+def test_chain_graph_arms_share_executor_cache():
+    """An arm wrapping a chain RelayGraph normalizes to the linear program
+    inside the executor: bit-identical images and not one extra compiled
+    pipeline vs the legacy arms (the golden cache counts are unchanged)."""
+    from repro.serving.arms import Arm
+
+    twins = tuple(
+        Arm(a.idx, linear_graph(a.program), a.label) for a in ARMS
+    )
+    ex = Executor(_toy_families(), arms=ARMS + twins)
+    seeds = np.arange(4) + 100
+    for legacy, twin in zip(ARMS, twins):
+        np.testing.assert_array_equal(
+            ex.generate_bucketed(twin, seeds),
+            ex.generate_bucketed(legacy, seeds), err_msg=legacy.label)
+    stats = ex.cache_stats()
+    assert stats["pipelines_compiled"] == 3  # same 3 shapes as the 11 arms
+    assert stats["pipeline_requests"] == 2 * len(ARMS)
+
+
+# ---------------------------------------------------------------------------
+# 2. canonical compilation: declaration order is invisible
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("graph_fn", [
+    lambda: speculative_program("XL", 20, 10),
+    lambda: speculative_program("F3", 20, 10),
+    lambda: ensemble_program("XL", 10),
+])
+def test_shuffled_declarations_compile_identically(graph_fn):
+    """Topologically equivalent declarations (seeded node/edge shuffles)
+    yield the identical canonical order, groups, shape key and bit-identical
+    latents."""
+    g = graph_fn()
+    spec = SPECS[g.family]()
+    plan = compile_plan(g)
+    x = _latent(spec, 3)
+    ref, ref_info = execute_graph(spec, g, MODELS, x, None)
+    for seed in (0, 1, 2, 3):
+        rng = np.random.default_rng(seed)
+        nodes = list(g.nodes)
+        edges = list(g.edges)
+        rng.shuffle(nodes)
+        rng.shuffle(edges)
+        shuffled = RelayGraph(g.family, tuple(nodes), tuple(edges))
+        plan_s = compile_plan(shuffled)
+        assert plan_s.order == plan.order
+        assert plan_s.groups == plan.groups
+        assert plan_s.edge_order == plan.edge_order
+        assert shuffled.shape_key() == g.shape_key()
+        out, info = execute_graph(spec, shuffled, MODELS, x, None)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert info["joins"] == ref_info["joins"]
+
+
+def test_speculative_plan_structure():
+    """The compiled speculative twin-hop: canonical order with the source
+    first, the select metadata derived from the graph (gap fraction,
+    verify steps, gate→reference cancellation set)."""
+    plan = compile_plan(speculative_program("XL", 20, 10))
+    assert plan.order == ("edge", "device~spec", "edge+", "device", "select")
+    assert plan.order[0] == plan.source == "edge"
+    assert plan.sink == "select"
+    assert not plan.is_chain
+    sel = plan.selects["select"]
+    assert sel.reference == "device" and sel.candidates == ("device~spec",)
+    assert sel.gate == "edge+"
+    assert sel.skip_on_accept == frozenset({"device"})
+    assert sel.gap_frac == pytest.approx((20 - 10) / 20)
+    ds = plan.graph.node("device~spec").segment
+    d = plan.graph.node("device").segment
+    assert sel.verify_steps == d.start - ds.start > 0
+
+
+# ---------------------------------------------------------------------------
+# 3. Select / Merge semantics over real latents
+# ---------------------------------------------------------------------------
+
+
+def _ref_chain(g: RelayGraph) -> RelayGraph:
+    """The reference path of a speculative graph as its own chain:
+    edge → edge+ → device (what a rejected speculation must equal)."""
+    keep = ("edge", "edge+", "device")
+    nodes = tuple(GraphNode(n.nid, segment=n.segment) for n in g.nodes
+                  if n.nid in keep)
+    edges = tuple(GraphEdge(e.src, e.dst, e.handoff) for e in g.edges
+                  if e.src in keep and e.dst in keep)
+    return RelayGraph(g.family, nodes, edges)
+
+
+def _spec_chain(g: RelayGraph) -> RelayGraph:
+    """The speculative path as its own chain: edge → device~spec (what an
+    accepted speculation must equal)."""
+    keep = ("edge", "device~spec")
+    nodes = tuple(GraphNode(n.nid, segment=n.segment) for n in g.nodes
+                  if n.nid in keep)
+    edges = tuple(GraphEdge(e.src, e.dst, e.handoff) for e in g.edges
+                  if e.src in keep and e.dst in keep)
+    return RelayGraph(g.family, nodes, edges)
+
+
+def test_select_reject_equals_reference_chain():
+    """bound_pct=0 forces reject: the surviving latent is bitwise the
+    reference chain's output (the fixed two-hop path, compressed hop
+    included), and the join records the reject."""
+    g = speculative_program("XL", 20, 10, bound_pct=0.0)
+    spec = SPECS["XL"]()
+    x = _latent(spec, 4)
+    out, info = execute_graph(spec, g, MODELS, x, None)
+    ref, _ = execute_graph(spec, _ref_chain(g), MODELS, x, None)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    (j,) = info["joins"]
+    assert j["accepted"] is False and j["winner"] == "device"
+    assert j["deviation_pct"] > j["bound_pct"] == 0.0
+
+
+def test_select_accept_equals_speculative_chain():
+    """A huge bound forces accept: the surviving latent is bitwise the
+    speculative chain's output and the measured deviation is within it."""
+    g = speculative_program("XL", 20, 10, bound_pct=1e9)
+    spec = SPECS["XL"]()
+    x = _latent(spec, 5)
+    out, info = execute_graph(spec, g, MODELS, x, None)
+    cand, _ = execute_graph(spec, _spec_chain(g), MODELS, x, None)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cand))
+    (j,) = info["joins"]
+    assert j["accepted"] is True and j["winner"] == "device~spec"
+    assert j["deviation_pct"] <= j["bound_pct"]
+
+
+def test_merge_is_branch_average():
+    """The ensemble's Merge node is the exact latent mean of its branch
+    chains."""
+    g = ensemble_program("XL", 10)
+    spec = SPECS["XL"]()
+    x = _latent(spec, 6)
+    out, info = execute_graph(spec, g, MODELS, x, None)
+    keep_a, keep_b = ("edge", "device"), ("edge", "refine")
+    branches = []
+    for keep in (keep_a, keep_b):
+        nodes = tuple(GraphNode(n.nid, segment=n.segment) for n in g.nodes
+                      if n.nid in keep)
+        edges = tuple(GraphEdge(e.src, e.dst, e.handoff) for e in g.edges
+                      if e.src in keep and e.dst in keep)
+        b, _ = execute_graph(spec, RelayGraph(g.family, nodes, edges),
+                             MODELS, x, None)
+        branches.append(b)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray((branches[0] + branches[1]) / 2.0))
+    (j,) = info["joins"]
+    assert j["kind"] == "merge" and set(j["inputs"]) == {"device", "refine"}
+
+
+def test_dag_arms_execute_and_rerun_bit_identically():
+    """DAG arms run through the executor's graph pipelines with the same
+    bucketed-seeding contract as linear arms: subset re-runs (the straggler
+    re-issue path) are bit-identical rows."""
+    arms = dag_action_space()
+    ex = Executor(_toy_families(), arms=arms)
+    seeds = np.arange(5) + 11
+    for arm in arms[11:]:
+        out = ex.generate_bucketed(arm, seeds)
+        assert out.shape == (5,) + SPECS[arm.program.family]().latent_shape
+        part = ex.generate_bucketed(arm, seeds, subset=[0, 2])
+        np.testing.assert_array_equal(part, out[[0, 2]], err_msg=arm.label)
+
+
+# ---------------------------------------------------------------------------
+# 4. both serving runtimes resolve every speculation identically
+# ---------------------------------------------------------------------------
+
+
+def _parity_arms():
+    """The 15 DAG arms plus one always-reject speculation (explicit zero
+    bound), so both select outcomes occur in every parity stream."""
+    from repro.serving.arms import Arm
+
+    arms = dag_action_space()
+    return arms + (Arm(len(arms),
+                       speculative_program("XL", 20, 10, bound_pct=0.0),
+                       "XL@s=20|spec=10|reject"),)
+
+
+def _dag_run(runtime, seed, n=60):
+    arms = _parity_arms()
+    cfg = SimConfig(n_requests=n, mean_interarrival=1.2, seed=seed,
+                    straggler_prob=0.15, straggler_factor=6.0)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs, arms=arms)
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime=runtime,
+                        runtime_cfg=RuntimeConfig(trace=True), arms=arms)
+    recs = eng.run(reqs)
+    return eng, {r.rid: r for r in recs}
+
+
+def _join_outcomes(tracer):
+    out = {}
+    for rid, tr in tracer.requests.items():
+        joins = [(s.name, s.meta.get("accepted"), s.meta.get("winner"),
+                  s.meta.get("deviation_pct"), s.meta.get("bound_pct"))
+                 for s in tr.spans if s.kind == "join"]
+        if joins:
+            out[rid] = sorted(joins)
+    return out
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_runtime_parity_on_dag_action_space(seed):
+    """Sequential vs continuous on the 15-arm DAG space under CyclePolicy:
+    identical arm decisions, quality dicts, fault counters and — per
+    request — identical select/merge outcomes (accept flag, winner,
+    deviation, bound).  Spans tile t_total on both engines.  t_total itself
+    is runtime-specific (micro-batching vs singleton service), by design."""
+    eng_s, recs_s = _dag_run("sequential", seed)
+    eng_c, recs_c = _dag_run("continuous", seed)
+    assert sorted(recs_s) == sorted(recs_c)
+    for rid in recs_s:
+        assert recs_s[rid].arm == recs_c[rid].arm, rid
+        assert recs_s[rid].quality == recs_c[rid].quality, rid
+    assert eng_s.fault_counters.as_dict() == eng_c.fault_counters.as_dict()
+    js, jc = _join_outcomes(eng_s.tracer), _join_outcomes(eng_c.tracer)
+    assert js and set(js) == set(jc)
+    for rid in js:
+        assert js[rid] == jc[rid], rid
+    # at this seed both outcomes occur somewhere in the stream
+    flags = {acc for outs in js.values() for (_, acc, _, _, _) in outs
+             if acc is not None}
+    assert flags == {True, False}
+    for eng in (eng_s, eng_c):
+        assert eng.tracer.coverage() == 1.0
+        assert attribution_residual(eng.tracer) < 1e-6
+
+
+def test_dag_tracing_off_is_bit_identical():
+    """Tracing on/off never perturbs scheduler-visible DAG behavior."""
+    arms = dag_action_space()
+    cfg = SimConfig(n_requests=40, mean_interarrival=1.2, seed=7)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs, arms=arms)
+    runs = []
+    for trace in (True, False):
+        eng = ServingEngine(CyclePolicy(), qt, cfg, runtime="continuous",
+                            runtime_cfg=RuntimeConfig(trace=trace), arms=arms)
+        runs.append(sorted(eng.run(reqs), key=lambda r: r.rid))
+    on, off = runs
+    assert [r.arm for r in on] == [r.arm for r in off]
+    assert [r.t_total for r in on] == [r.t_total for r in off]
+    assert [r.quality for r in on] == [r.quality for r in off]
+    assert [r.reward for r in on] == [r.reward for r in off]
+
+
+def test_legacy_arms_unperturbed_inside_dag_space():
+    """The 11 legacy arms produce identical records whether they run in the
+    11-arm space or as the linear prefix of the 15-arm DAG space (same
+    seeds → same requests; CyclePolicy hits arm k at the same rids only
+    when cycles align, so compare via single-arm streams)."""
+    from repro.core.policies import Policy
+
+    class Fixed(Policy):
+        name = "Fixed"
+
+        def __init__(self, k):
+            self.k = k
+
+        def select(self, ctx, avail):
+            return self.k
+
+    cfg = SimConfig(n_requests=30, mean_interarrival=1.5, seed=13)
+    reqs = make_requests(cfg)
+    for k in (0, 3, 8):  # standalone, XL relay, F3 relay
+        runs = []
+        for arms in (build_action_space(), dag_action_space()):
+            qt = synthetic_quality_table(reqs, arms=arms)
+            eng = ServingEngine(Fixed(k), qt, cfg, runtime="continuous",
+                                arms=arms)
+            runs.append(sorted(eng.run(reqs), key=lambda r: r.rid))
+        legacy, dag = runs
+        assert [r.t_total for r in legacy] == [r.t_total for r in dag]
+        assert [r.quality for r in legacy] == [r.quality for r in dag]
+        assert [r.reward for r in legacy] == [r.reward for r in dag]
+
+
+# ---------------------------------------------------------------------------
+# 5. the Eq. 1 speculation model is pure and monotone
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_deviation_model_properties():
+    base = 0.4
+    # contracts toward the base as the candidate refines (Fig. 2 decay)
+    devs = [speculative_deviation_pct(base, 0.5, v, 0.5) for v in range(6)]
+    assert all(b < a for a, b in zip(devs, devs[1:]))
+    assert devs[1] == pytest.approx(devs[0] * SPEC_DECAY)
+    # grows with skipped-step fraction and prompt complexity
+    assert speculative_deviation_pct(base, 0.8, 0, 0.5) > \
+        speculative_deviation_pct(base, 0.2, 0, 0.5)
+    assert speculative_deviation_pct(base, 0.5, 0, 0.9) > \
+        speculative_deviation_pct(base, 0.5, 0, 0.1)
+    # zero gap or zero complexity: no inflation at verify time 0
+    assert speculative_deviation_pct(base, 0.0, 0, 0.7) == base
+    assert speculative_deviation_pct(base, 0.7, 0, 0.0) == base
+    assert speculative_deviation_pct(base, 0.5, 0, 0.5) == \
+        base * (1 + SPEC_GAMMA * 0.5 * 0.5)
+
+
+def test_select_outcome_matches_model_and_bound_modes():
+    g = speculative_program("XL", 20, 10)
+    plan = compile_plan(g)
+    sel = plan.selects["select"]
+    node = plan.nodes[plan.index["select"]]
+    for base, cx in [(0.4, 0.05), (0.4, 0.95), (1.5, 0.5), (0.01, 0.0)]:
+        acc, dev, bound = select_outcome(plan, "select", cx, base)
+        assert dev == speculative_deviation_pct(base, sel.gap_frac,
+                                                sel.verify_steps, cx)
+        assert bound == select_bound_pct(node, base) == SPEC_BOUND_REL * base
+        assert acc == (dev <= bound)
+        # pure: same inputs, same outcome
+        assert select_outcome(plan, "select", cx, base) == (acc, dev, bound)
+    # explicit bound mode overrides relative mode
+    g2 = speculative_program("XL", 20, 10, bound_pct=2.5)
+    plan2 = compile_plan(g2)
+    _, _, bound2 = select_outcome(plan2, "select", 0.5, 0.4)
+    assert bound2 == 2.5
+
+
+def test_graph_aggregate_views_and_latency():
+    """Duck-typed aggregate views and the graph latency model: the chain
+    case reduces to the linear arithmetic; critical path of the twin-hop
+    never exceeds the serial sum of its parts."""
+    from repro.serving import latency as lat
+
+    prog = relay_program("XL", 20)
+    chain = linear_graph(prog)
+    assert chain.segments == prog.segments
+    assert chain.pools == prog.pools and chain.n_hops == prog.n_hops
+    plan_c = compile_plan(chain)
+    node_s = lat.graph_node_seconds(plan_c)
+    hop_s = lat.graph_hop_seconds(plan_c, 80.0)
+    lb = lat.program_latency(prog, 80.0)
+    assert lat.graph_critical_seconds(plan_c, node_s, hop_s) == \
+        pytest.approx(lb.total)
+
+    g = speculative_program("XL", 20, 10)
+    plan = compile_plan(g)
+    ns = lat.graph_node_seconds(plan)
+    hs = lat.graph_hop_seconds(plan, 80.0)
+    crit = lat.graph_critical_seconds(plan, ns, hs)
+    assert crit <= sum(ns.values()) + sum(hs.values())
+    assert crit == pytest.approx(
+        lat.graph_ideal_seconds(plan, 80.0), rel=1e-9)

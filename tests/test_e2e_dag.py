@@ -1,0 +1,62 @@
+"""End-to-end CI gate for the DAG benchmark: ``bench_dag --quick`` runs as
+a subprocess (the same entry point a developer invokes) and its frontier
+assertions hold — every shipped speculative twin-hop beats its fixed 2-hop
+twin on p95 latency at equal-or-better effective Eq. 1 deviation.
+
+@slow: the fast gate skips this; scripts/ci.sh runs it as its own full-gate
+stage (JUnit artifact dag.xml) next to the e2e IR-path smoke.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+
+pytestmark = pytest.mark.slow
+
+
+def _run(args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, *args], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=ROOT,
+    )
+    assert r.returncode == 0, (
+        f"{' '.join(map(str, args))}\nSTDOUT:\n{r.stdout[-2000:]}\n"
+        f"STDERR:\n{r.stderr[-3000:]}"
+    )
+    return r.stdout
+
+
+def test_bench_dag_quick_frontier():
+    """The benchmark's own asserts are the gate (it exits non-zero off the
+    frontier); on top, the emitted JSON must carry every shipped
+    speculative pair on the frontier with a sane accept rate, and the
+    committed full-run numbers must agree with the quick run's verdicts."""
+    out = _run([ROOT / "benchmarks" / "bench_dag.py", "--quick"])
+    assert "dag_summary" in out
+    data = json.loads((RESULTS / "bench_dag_quick.json").read_text())
+    spec = [p for p in data["pairs"] if p["kind"] == "speculative"]
+    assert len(spec) == 3  # DEFAULT_SPECULATIVE
+    for p in spec:
+        assert p["on_frontier"], p["dag"]["label"]
+        assert p["p95_win"] > 1.0
+        assert p["dag"]["eff_deviation_pct_mean"] <= \
+            p["fixed"]["eff_deviation_pct_mean"] + 1e-9
+        assert p["dag"]["accept_rate"] >= 0.5  # speculation must mostly pay
+        assert p["dag"]["coverage"] == 1.0
+        assert p["dag"]["attribution_residual"] < 1e-6
+    ens = [p for p in data["pairs"] if p["kind"] == "ensemble"]
+    assert ens and all(p["deviation_ok"] for p in ens)
+    committed = RESULTS / "bench_dag.json"
+    if committed.exists():  # the shipped full-run baseline, when present
+        full = json.loads(committed.read_text())
+        assert all(p["on_frontier"] for p in full["pairs"]
+                   if p["kind"] == "speculative")

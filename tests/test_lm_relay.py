@@ -6,7 +6,9 @@ import numpy as np
 from repro import configs
 from repro.configs.base import make_reduced
 from repro.models import transformer as tr
-from repro.serving.lm_relay import greedy_decode, relay_decode, sequence_logprob
+from repro.serving.lm_relay import (execute_lm_program, greedy_decode,
+                                    lm_program, relay_decode,
+                                    sequence_logprob)
 
 CFG = make_reduced(configs.get_config("qwen3-4b"))
 
@@ -36,6 +38,63 @@ def test_relay_full_edge_equals_large_only():
     seq_large = greedy_decode(pl_, CFG, prompt, 6)
     seq_relay, _ = relay_decode(pl_, CFG, ps_, CFG, prompt, 6, 6)
     np.testing.assert_array_equal(np.asarray(seq_relay), np.asarray(seq_large))
+
+
+def test_lm_program_is_ir_plan():
+    """The token ladder maps onto the relay-program IR: token ranges as
+    segment slices, the handoff at the shared prefix boundary."""
+    from repro.core.program import as_graph, compile_plan
+
+    prog = lm_program(4, 10)
+    assert prog.family == "LM" and prog.n_hops == 1
+    assert [(s.model, s.start, s.stop) for s in prog.segments] == \
+        [("large", 0, 4), ("small", 4, 10)]
+    h = prog.handoffs[0]
+    assert h.sigma_out == h.sigma_in == 4.0 and h.noise_gap == 0.0
+    plan = compile_plan(as_graph(prog))
+    assert plan.is_chain and plan.order == ("n00", "n01")
+    # degenerate full-edge plan: one segment, no handoff
+    assert lm_program(6, 6).n_hops == 0
+
+
+def test_relay_decode_parity_with_standalone_path():
+    """The IR coordinator (lm_program → execute_lm_program) reproduces the
+    previous standalone two-call path bit-for-bit, and its spans tile the
+    logical token clock."""
+    from repro.serving.obs import SpanTracer
+
+    pl_, ps_ = _params(0), _params(1)
+    prompt = jnp.asarray(
+        np.random.default_rng(4).integers(0, CFG.vocab_size, (2, 3)))
+    s, total = 3, 8
+    # the pre-IR standalone path: two greedy decodes chained by hand
+    seq_legacy = greedy_decode(ps_, CFG, greedy_decode(pl_, CFG, prompt, s),
+                               total - s)
+    tracer = SpanTracer()
+    seq_ir, info = relay_decode(pl_, CFG, ps_, CFG, prompt, s, total,
+                                tracer=tracer, rid=7)
+    np.testing.assert_array_equal(np.asarray(seq_ir), np.asarray(seq_legacy))
+    assert info["node_tokens"] == {"n00": s, "n01": total - s}
+    assert info["total_tokens"] == total
+    assert info["transfer_bytes"] == 2 * (3 + s) * 4
+    assert info["shape_key"] == lm_program(s, total).shape_key()
+    # spans tile the logical clock: one second per token, rid as passed
+    t = tracer.requests[7]
+    assert t.complete and t.t_total == float(total)
+    assert t.attributed_s() == float(total)
+    names = [sp.name for sp in t.spans if sp.kind == "segment"]
+    assert names == ["n00", "n01"]
+    assert any(sp.kind == "hop" for sp in t.spans)
+
+
+def test_execute_lm_program_rejects_join_nodes():
+    """Merge/select joins have no token-space semantics — the LM
+    coordinator refuses non-chain plans instead of guessing."""
+    from repro.serving.arms import ensemble_program
+
+    with np.testing.assert_raises_regex(ValueError, "token-space"):
+        execute_lm_program(ensemble_program("XL", 10),
+                           {}, {}, jnp.zeros((1, 2), jnp.int32))
 
 
 def test_sequence_logprob_finite_and_better_for_own_samples():

@@ -1,13 +1,12 @@
 """Observability layer: span tracer invariants, Chrome trace export +
 schema validation, bounded streaming statistics, latency attribution,
-scheduler introspection, the event-loop profiler and the deprecated
-``metrics`` re-export shim.
+scheduler introspection, the event-loop profiler and the removed
+``metrics`` re-export (hard ImportError with a pointer).
 
 Cross-runtime span parity and the golden attribution test live in
 tests/test_runtime_parity.py next to the rest of the parity suite.
 """
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -66,6 +65,53 @@ def test_tracer_manual_lifecycle():
     assert legacy["transfer_s"] == pytest.approx(0.5)
     assert legacy["transfer_bytes"] == 1000
     assert legacy["done"] == 8.0
+
+
+def test_tracer_dag_branch_join_offpath():
+    """DAG span kinds: branch/join markers, per-branch concurrent spans,
+    sticky offpath marking, and attributed_s still tiling arrival → done."""
+    tr = SpanTracer()
+    tr.start_request(0, 0.0, 11, "sdxl+vega@s=20|spec=10")
+    tr.enqueue(0, "edge", 0.0)
+    tr.start_segment(0, "edge", 0.0, "sdxl")
+    tr.end_segment(0, 4.0, name="edge")
+    tr.branch_point(0, "edge", 4.0, ("spec", "ref"))
+    # two branches open concurrently for the same rid
+    tr.hop(0, ":edge->device~spec", 4.0, 4.5, 500, True, pool="sdxl",
+           branch="spec")
+    tr.enqueue(0, "edge+", 4.0, branch="ref")
+    tr.start_segment(0, "edge+", 4.0, "sdxl")
+    tr.enqueue(0, "device~spec", 4.5, branch="spec")
+    tr.start_segment(0, "device~spec", 4.5, "vega")
+    tr.end_segment(0, 7.0, name="device~spec")
+    tr.hop(0, ":device~spec->select", 7.0, 7.0, 0, False, branch="spec")
+    tr.end_segment(0, 8.0, name="edge+")
+    # accept: the ref branch loses; resolution waits on the gate (edge+)
+    tr.mark_offpath(0, "ref")
+    tr.join(0, "select", 7.0, 8.0, winner="device~spec", accepted=True,
+            deviation_pct=1.5, bound_pct=2.0, ignored=None)
+    tr.end_request(0, 8.0)
+
+    t = tr.requests[0]
+    # the edge+ service span inherited branch="ref" from its queue span
+    segs = {s.name: s for s in t.spans if s.kind == "segment"}
+    assert segs["edge+"].meta["branch"] == "ref"
+    assert segs["edge+"].meta.get("offpath") is True
+    assert segs["device~spec"].meta["branch"] == "spec"
+    assert "offpath" not in segs["device~spec"].meta
+    # sticky: a late span of the resolved-away branch is flagged on append
+    tr.hop(0, ":edge+->device", 8.0, 8.5, 500, True, pool="sdxl",
+           branch="ref")
+    assert t.spans[-1].meta["offpath"] is True
+    # join meta filtered Nones and kept the outcome
+    j = next(s for s in t.spans if s.kind == "join")
+    assert j.meta == {"winner": "device~spec", "accepted": True,
+                      "deviation_pct": 1.5, "bound_pct": 2.0}
+    # attribution path (edge 4 + spec hop .5 + spec queue 0 + spec 2.5 +
+    # hop 0 + join 1) tiles t_total = 8
+    assert t.attributed_s() == pytest.approx(t.t_total)
+    # branch/join excluded from the default structural signature
+    assert all(k in ("segment", "hop") for k, _ in span_structure(tr, 0))
 
 
 def test_tracer_spans_tile_lifetime_both_runtimes():
@@ -134,6 +180,74 @@ def test_chrome_validator_catches_corruption():
     bad3 = json.loads(json.dumps(trace))
     bad3["traceEvents"] = [e for e in bad3["traceEvents"] if e["ph"] != "f"]
     assert any("finishes" in msg for msg in validate_chrome_trace(bad3))
+
+
+def _traced_dag_run(runtime="continuous", n=48, **sim_kw):
+    from repro.serving.arms import dag_action_space
+
+    arms = dag_action_space()
+    cfg = SimConfig(n_requests=n, mean_interarrival=1.2, seed=5, **sim_kw)
+    reqs = make_requests(cfg)
+    qt = synthetic_quality_table(reqs, arms=arms)
+    eng = ServingEngine(CyclePolicy(), qt, cfg, runtime=runtime,
+                        runtime_cfg=RuntimeConfig(trace=True), arms=arms)
+    recs = eng.run(reqs)
+    return eng, sorted(recs, key=lambda r: r.rid)
+
+
+def test_chrome_trace_dag_branch_flows(tmp_path):
+    """DAG requests export as per-branch flow tracks: a relay control
+    process, branch instants, join spans carrying the select outcome, and
+    every branch flow (one s, one f) anchored to its trunk flow."""
+    eng, _ = _traced_dag_run()
+    trace = write_chrome_trace(eng.tracer, str(tmp_path / "dag.json"))
+    assert validate_chrome_trace(trace) == []
+    eng_seq, _ = _traced_dag_run("sequential", n=24)
+    assert validate_chrome_trace(to_chrome_trace(eng_seq.tracer)) == []
+    evs = trace["traceEvents"]
+    procs = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert "relay" in procs
+    assert any(e["ph"] == "i" and e.get("cat") == "branch" for e in evs)
+    joins = [e for e in evs if e["ph"] == "X" and e.get("cat") == "join"]
+    assert joins and all("winner" in e["args"] for e in joins)
+    sel = [e for e in joins if e["name"] == "join:select"]
+    assert sel and all("accepted" in e["args"] for e in sel)
+    # per-branch flows, each resolving, each anchored to a trunk flow
+    fids = {e["id"] for e in evs if e["ph"] in ("s", "t", "f")}
+    branch_fids = {f for f in fids if isinstance(f, str) and "/" in f}
+    assert branch_fids  # spec/ref and a/b branch tracks exist
+    assert {f.split("/", 1)[1] for f in branch_fids} >= {"spec", "ref"}
+    for f in branch_fids:
+        assert int(f.split("/", 1)[0]) in fids
+    # losing-branch spans are drawn, tagged offpath
+    assert any(e["ph"] == "X" and e["args"].get("offpath") for e in evs)
+
+
+def test_chrome_validator_catches_dag_corruption():
+    eng, _ = _traced_dag_run(n=20)
+    trace = to_chrome_trace(eng.tracer)
+    assert validate_chrome_trace(trace) == []
+    bad = json.loads(json.dumps(trace))
+    for e in bad["traceEvents"]:
+        if e["ph"] == "i":
+            del e["s"]
+            break
+    assert any("instant scope" in msg for msg in validate_chrome_trace(bad))
+    bad2 = json.loads(json.dumps(trace))
+    for e in bad2["traceEvents"]:
+        if e.get("cat") == "join":
+            del e["args"]["winner"]
+            break
+    assert any("args.winner" in msg for msg in validate_chrome_trace(bad2))
+    bad3 = json.loads(json.dumps(trace))
+    victim = next(e["id"] for e in bad3["traceEvents"]
+                  if e["ph"] == "s" and isinstance(e["id"], str))
+    trunk = victim.split("/", 1)[0]
+    bad3["traceEvents"] = [
+        e for e in bad3["traceEvents"]
+        if not (e.get("ph") in ("s", "t", "f") and str(e["id"]) == trunk)
+    ]
+    assert any("no trunk flow" in msg for msg in validate_chrome_trace(bad3))
 
 
 def test_spans_jsonl_roundtrip(tmp_path):
@@ -305,19 +419,21 @@ def test_profiler_ignored_by_sequential_engine():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shim
+# removed re-export
 # ---------------------------------------------------------------------------
 
 
-def test_metrics_export_shim_warns_and_matches():
+def test_metrics_export_removed_raises_with_pointer():
+    """The metrics re-export completed its deprecation cycle: the old name
+    is a hard ImportError naming the new home; the real function lives in
+    repro.serving.obs.export."""
     import repro.serving.metrics as metrics
     from repro.serving.obs.export import export_runtime_telemetry
 
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        fn = metrics.export_runtime_telemetry
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert fn is export_runtime_telemetry
-    assert fn(None) == {}
+    with pytest.raises(ImportError,
+                       match="repro.serving.obs.export"
+                             ".export_runtime_telemetry"):
+        metrics.export_runtime_telemetry
+    assert export_runtime_telemetry(None) == {}
     with pytest.raises(AttributeError):
         metrics.no_such_attribute

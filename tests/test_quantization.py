@@ -138,16 +138,18 @@ def test_unknown_quantizer_rejected():
         get_quantizer("fp4")
 
 
-def test_deprecated_compression_reexports():
-    """The old `repro.distributed.compression` names still resolve (so
-    external callers don't break) but warn, and are the same objects."""
+def test_removed_compression_reexports_raise_with_pointer():
+    """The old `repro.distributed.compression` names completed their
+    deprecation cycle: resolving one is now a hard ImportError whose
+    message names the new home (repro.quantization)."""
     import repro.distributed.compression as comp
 
     for name in ("quant_rowwise", "dequant_rowwise", "quant_log8",
                  "dequant_log8", "quant_error", "latent_roundtrip_int8",
-                 "LOG8_RANGE"):
-        with pytest.deprecated_call():
-            obj = getattr(comp, name)
-        assert obj is getattr(qz, name), name
+                 "latent_roundtrip", "LOG8_RANGE"):
+        with pytest.raises(ImportError, match=f"repro.quantization.{name}"):
+            getattr(comp, name)
+        assert hasattr(qz, name), name  # the pointer target exists
     with pytest.raises(AttributeError):
         comp.never_existed
+    assert callable(comp.compressed_psum)  # the collective itself remains
