@@ -54,6 +54,15 @@ if [ "${1:-full}" = "full" ]; then
     python -m pytest -q --durations=0 --junitxml "$JUNIT_DIR/dag.xml" \
         tests/test_e2e_dag.py
 
+    echo "== fused boundary (parity + tail-speedup + roofline, micro-bench) =="
+    # the int8 handoff gate: bench_handoff --quick times the fused
+    # emit/consume tails against the unfused step|quant|dequant|step
+    # sequence, asserts exact wire-payload parity, no fused-tail
+    # regression (≤1.1×) and the latency-model roofline (fused boundary
+    # priced at wire time alone)
+    python -m pytest -q --durations=0 --junitxml "$JUNIT_DIR/handoff.xml" \
+        tests/test_e2e_handoff.py
+
     echo "== distributed correctness (sharded/pipeline/psum vs local refs) =="
     # explicit hard gate (not just via the tier-1 sweep): the distribution
     # suite plus the mesh×dtype×quantizer parity harness.  --durations and
@@ -107,6 +116,7 @@ if [ "${1:-full}" = "full" ]; then
         --ignore tests/test_distribution_parity.py \
         --ignore tests/test_e2e_smoke.py \
         --ignore tests/test_e2e_dag.py \
+        --ignore tests/test_e2e_handoff.py \
         | tee "$out"
     rc=${PIPESTATUS[0]}
     set -e

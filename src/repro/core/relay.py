@@ -123,6 +123,7 @@ def execute_program(
     *,
     uncond=None,
     capture_traj: bool = False,
+    fused_boundary: bool = False,
 ):
     """Fold the latent through a program's segments, handing off between
     models with Eq. 4 noise continuity and per-hop Eq. 1-style deviation
@@ -134,27 +135,70 @@ def execute_program(
     registered int8 quantizer — the downstream model resumes from the
     *dequantized* latent, exactly what the wire would deliver.
 
+    ``fused_boundary`` routes compressed hops through
+    :mod:`repro.core.boundary`: the emitting segment's last step writes the
+    int8+scales wire payload in one fused dispatch and the consuming
+    segment's first step reads it — exact byte counts and payload ints,
+    numerically equivalent latents and deviations (the parity contract in
+    :mod:`repro.core.boundary`, locked by ``tests/test_fused_boundary.py``),
+    and the fp16 boundary latent is never materialized between the step
+    and the wire.
+    Incompatible with ``capture_traj`` (the fused steps are not part of
+    the recorded scans); fused hop dicts carry ``x_out=None``.  A 1-step
+    segment cannot both consume and emit fused (its only step can't be
+    two boundary steps) — that program shape raises.
+
     Returns ``(x_final, info)``.  ``info`` carries per-segment trajectories
     (``trajs``, when ``capture_traj``), per-hop dicts (``hops``: latent,
     bytes-on-wire, deviation percentage, sigmas) and the totals the legacy
     API exposed (``transfer_bytes``, ``handoff_deviation_pct`` — the worst
     hop)."""
+    if fused_boundary and capture_traj:
+        raise ValueError(
+            "fused_boundary is incompatible with capture_traj: boundary "
+            "steps run outside the recorded scan"
+        )
     sample = _sampler(spec.kind)
 
     def _for(role, v):
         return v[role] if isinstance(v, dict) else v
 
     x = x_init
+    pending = None  # (wire payload, quantizer) emitted by the previous hop
     trajs = []
     hops = []
     total_bytes = 0
     worst_dev = jnp.zeros(())
     for k, seg in enumerate(program.segments):
         fn, params = models[seg.model]
+        sigmas = spec.ladder(seg.model)
+        seg_cond = _for(seg.model, cond)
+        seg_uncond = _for(seg.model, uncond) if uncond is not None else None
+        lo, hi = seg.start, seg.stop
+        fuse_out = (fused_boundary and k < program.n_hops
+                    and program.handoffs[k].compress)
+        if pending is not None:
+            # fused consume: the first step reads the wire payload
+            from repro.core import boundary
+
+            qs, pq = pending
+            x = boundary.dequant_step(
+                spec.kind, fn, params, qs, spec.latent_shape, sigmas,
+                lo, seg_cond, seg_uncond, seg.guidance, quantizer=pq,
+            )
+            pending = None
+            lo = lo + 1
+        if fuse_out:
+            hi = hi - 1
+            if lo > hi:
+                raise ValueError(
+                    f"segment {k} of {program.family} has too few steps to "
+                    "both consume and emit a fused boundary (needs >= 2)"
+                )
         x, traj = sample(
-            fn, params, x, spec.ladder(seg.model), _for(seg.model, cond),
-            start=seg.start, stop=seg.stop,
-            uncond=_for(seg.model, uncond) if uncond is not None else None,
+            fn, params, x, sigmas, seg_cond,
+            start=lo, stop=hi,
+            uncond=seg_uncond,
             guidance=seg.guidance, capture_traj=capture_traj,
         )
         trajs.append(traj)
@@ -166,7 +210,19 @@ def execute_program(
         # model sees the round-tripped latent.
         h = program.handoffs[k]
         x_out = x
-        if h.compress:
+        if fuse_out:
+            # fused emit: the segment's last step writes the wire payload
+            from repro.core import boundary
+
+            res = boundary.quant_step(
+                spec.kind, fn, params, x, sigmas, hi, seg_cond, seg_uncond,
+                seg.guidance, quantizer=h.quantizer, flavor="wire_dev",
+            )
+            pending = (res["wire"], h.quantizer)
+            nbytes = res["bytes"]
+            dev = res["dev_pct"]
+            x_out = None  # never materialized — that's the point
+        elif h.compress:
             from repro.quantization import latent_roundtrip, relative_deviation
 
             rec, nbytes = latent_roundtrip(x, h.quantizer)
@@ -204,6 +260,7 @@ def execute_graph(
     *,
     uncond=None,
     capture_traj: bool = False,
+    fused_boundary: bool = False,
 ):
     """The flow coordinator: execute a DAG plan over real latents.
 
@@ -222,18 +279,61 @@ def execute_graph(
     :func:`execute_program` on the bridged program — bit-identical latents
     (property-tested in ``tests/test_dag.py``).
 
+    With ``fused_boundary`` compressed hop edges into segment nodes route
+    through :mod:`repro.core.boundary`: a branch point with compressed
+    out-edges emits the wire payload once from its last step (shared by
+    every same-quantizer consumer — it is the same payload the unfused
+    path would compute per edge), and each consuming segment's first step
+    reads it.  Nodes whose other consumers need the latent (joins, the
+    sink, mixed edges) keep it alongside the payload; byte accounting is
+    exact vs the unfused walk and the latents follow the parity contract
+    in :mod:`repro.core.boundary`.  Incompatible with ``capture_traj``.
+
     Returns ``(x_final, info)``; ``info`` mirrors the linear coordinator
     (``trajs``/``hops``/``transfer_bytes``/``handoff_deviation_pct`` over
     the *surviving* path) plus ``joins`` — one dict per join node with the
     winning predecessor and, for selects, the measured candidate deviation
     and the accept decision."""
+    if fused_boundary and capture_traj:
+        raise ValueError(
+            "fused_boundary is incompatible with capture_traj: boundary "
+            "steps run outside the recorded scan"
+        )
     plan = graph if isinstance(graph, CompiledPlan) else compile_plan(as_graph(graph))
     sample = _sampler(spec.kind)
 
     def _for(role, v):
         return v[role] if isinstance(v, dict) else v
 
+    kind_of = {n.nid: n.kind for n in plan.nodes}
+    fused_edges: set = set()  # edge ids consuming a fused wire payload
+    emit_cfg: dict = {}  # nid -> (quantizer, need_latent) for fused emits
+    if fused_boundary:
+        succs: dict = {n.nid: [] for n in plan.nodes}
+        for e in plan.edge_order:
+            succs[e.src].append(e)
+        for node in plan.nodes:
+            if node.kind != SEGMENT_NODE:
+                continue
+            wire_succ = [
+                e for e in succs[node.nid]
+                if e.handoff is not None and e.handoff.compress
+                and kind_of[e.dst] == SEGMENT_NODE
+            ]
+            if not wire_succ:
+                continue
+            # one fused emit per node: consumers sharing the first
+            # compressed edge's quantizer read the shared payload; any
+            # odd-quantizer edge falls back to the unfused roundtrip
+            q0 = wire_succ[0].handoff.quantizer
+            matched = [e for e in wire_succ if e.handoff.quantizer == q0]
+            fused_edges.update(matched)
+            need_latent = (node.nid == plan.sink
+                           or len(matched) < len(succs[node.nid]))
+            emit_cfg[node.nid] = (q0, need_latent)
+
     out: dict = {}  # nid -> output latent
+    wire: dict = {}  # nid -> (payload, dev_pct, bytes) of a fused emit
     path_dev: dict = {}  # nid -> worst hop deviation on the path into nid
     path_bytes: dict = {}  # nid -> wire bytes on the path into nid
     trajs, hops, joins = [], [], []
@@ -254,8 +354,39 @@ def execute_graph(
     for node in plan.nodes:
         pe = plan.preds[node.nid]
         if node.kind == SEGMENT_NODE:
+            seg = node.segment
+            fn, params = models[seg.model]
+            sigmas = spec.ladder(seg.model)
+            seg_cond = _for(seg.model, cond)
+            seg_uncond = (_for(seg.model, uncond)
+                          if uncond is not None else None)
+            lo, hi = seg.start, seg.stop
+            consumed = False
             if not pe:
                 x_in, dev_in, bytes_in = x_init, jnp.zeros(()), 0
+            elif fused_boundary and pe[0] in fused_edges:
+                # fused consume: step `start` reads the shared wire payload
+                from repro.core import boundary
+
+                e = pe[0]
+                qs, dev, nbytes = wire[e.src]
+                x_in = boundary.dequant_step(
+                    spec.kind, fn, params, qs, spec.latent_shape, sigmas,
+                    lo, seg_cond, seg_uncond, seg.guidance,
+                    quantizer=e.handoff.quantizer,
+                )
+                hops.append({
+                    "x_out": None,
+                    "transfer_bytes": nbytes,
+                    "deviation_pct": dev,
+                    "sigma_out": e.handoff.sigma_out,
+                    "sigma_in": e.handoff.sigma_in,
+                    "edge": (e.src, e.dst),
+                })
+                dev_in = jnp.maximum(path_dev[e.src], dev)
+                bytes_in = path_bytes[e.src] + nbytes
+                lo = lo + 1
+                consumed = True
             else:
                 e = pe[0]
                 x_up = out[e.src]
@@ -271,16 +402,36 @@ def execute_graph(
                     })
                 dev_in = jnp.maximum(path_dev[e.src], dev)
                 bytes_in = path_bytes[e.src] + nbytes
-            seg = node.segment
-            fn, params = models[seg.model]
+            emits = emit_cfg.get(node.nid) if fused_boundary else None
+            if emits is not None:
+                hi = hi - 1
+                if lo > hi:
+                    raise ValueError(
+                        f"graph node {node.nid} has too few steps to "
+                        f"{'both consume and ' if consumed else ''}emit a "
+                        "fused boundary"
+                    )
             x, traj = sample(
-                fn, params, x_in, spec.ladder(seg.model), _for(seg.model, cond),
-                start=seg.start, stop=seg.stop,
-                uncond=_for(seg.model, uncond) if uncond is not None else None,
+                fn, params, x_in, sigmas, seg_cond,
+                start=lo, stop=hi,
+                uncond=seg_uncond,
                 guidance=seg.guidance, capture_traj=capture_traj,
             )
             trajs.append(traj)
-            out[node.nid] = x
+            if emits is not None:
+                from repro.core import boundary
+
+                q0, need_latent = emits
+                res = boundary.quant_step(
+                    spec.kind, fn, params, x, sigmas, hi, seg_cond,
+                    seg_uncond, seg.guidance, quantizer=q0,
+                    flavor="wire_dev_latent" if need_latent else "wire_dev",
+                )
+                wire[node.nid] = (res["wire"], res["dev_pct"], res["bytes"])
+                if need_latent:
+                    out[node.nid] = res["latent"]
+            else:
+                out[node.nid] = x
             path_dev[node.nid] = dev_in
             path_bytes[node.nid] = bytes_in
         elif node.kind == MERGE_NODE:

@@ -37,6 +37,40 @@ def cfg_combine(fn, params, x, t, cond, uncond, scale: float):
     return e_u + scale * (e_c - e_u)
 
 
+def ddim_update(x, eps, ab_t, ab_s):
+    """The DDIM update's elementwise tail (Eq. 2, VP parameterization):
+    given the guided ε̂ and the (ᾱ_t, ᾱ_s) pair, produce the next latent.
+    Kept in the *two-term* form (x̂0 then recombine) — the algebraically
+    collapsed affine form is not bit-identical, and the fused boundary
+    kernels (:mod:`repro.kernels.fused_sampler`) must match this exactly."""
+    x0_hat = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_s) * x0_hat + jnp.sqrt(1 - ab_s) * eps
+
+
+def rf_update(x, v, dt):
+    """The rectified-flow Euler update's elementwise tail (Eq. 3)."""
+    return x + dt * v
+
+
+def step_coeffs(kind: str, sigmas, i):
+    """The (2,) coefficient vector of the step-update tail at ladder entry
+    ``i`` — the traced operand the fused boundary kernels take: "ddim" →
+    (ᾱ_t, ᾱ_s); "rf" → (Δt, 0).  ``i`` may be a traced int32."""
+    if kind == "ddim":
+        return jnp.stack([vp_alpha_bar(sigmas[i]), vp_alpha_bar(sigmas[i + 1])])
+    dt = sigmas[i + 1] - sigmas[i]
+    return jnp.stack([dt, jnp.zeros_like(dt)])
+
+
+def step_update(kind: str, x, eps, coeffs):
+    """Apply one sampler-step tail from its :func:`step_coeffs` vector —
+    the shared math of :func:`ddim_step` / :func:`rf_euler_step` and the
+    fused int8 boundary (bit-identical by construction)."""
+    if kind == "ddim":
+        return ddim_update(x, eps, coeffs[0], coeffs[1])
+    return rf_update(x, eps, coeffs[0])
+
+
 def ddim_step(eps_fn, params, x, sigmas, i, cond, uncond, guidance):
     """One DDIM update (Eq. 2, VP parameterization) from ladder entry i."""
     sig_t = sigmas[i]
@@ -44,8 +78,7 @@ def ddim_step(eps_fn, params, x, sigmas, i, cond, uncond, guidance):
     ab_t = vp_alpha_bar(sig_t)
     ab_s = vp_alpha_bar(sig_s)
     eps = cfg_combine(eps_fn, params, x, sig_t, cond, uncond, guidance)
-    x0_hat = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
-    return jnp.sqrt(ab_s) * x0_hat + jnp.sqrt(1 - ab_s) * eps
+    return ddim_update(x, eps, ab_t, ab_s)
 
 
 def rf_euler_step(v_fn, params, x, times, i, cond, uncond, guidance):
@@ -53,7 +86,7 @@ def rf_euler_step(v_fn, params, x, times, i, cond, uncond, guidance):
     t = times[i]
     dt = times[i + 1] - times[i]
     v = cfg_combine(v_fn, params, x, t, cond, uncond, guidance)
-    return x + dt * v
+    return rf_update(x, v, dt)
 
 
 def _sample(

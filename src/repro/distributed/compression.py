@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.compat import shard_map
-from repro.quantization import error_feedback_step, get_quantizer
+from repro.quantization import fused_error_feedback_step, get_quantizer
 
 Array = jax.Array
 
@@ -48,6 +48,13 @@ def compressed_psum(tree, mesh, axis: str = "pod", error_state=None,
     payloads are psum'd, and the residual is carried to the next sync — so
     the accumulated mean converges to exact even though each individual
     sync is lossy.  Returns (reduced_tree, new_error_state).
+
+    The per-shard round-trip goes through the *fused* quantizer step
+    (``repro.quantization.fused_error_feedback_step`` — the same path the
+    fused relay boundaries compose): the reconstruction computed for the
+    error carry is the one fed to the psum, so the payload dequantizes
+    exactly once per shard instead of twice.  Bit-identical to the
+    two-dequant form.
     """
     qz = get_quantizer(quantizer)
     n = mesh.shape[axis]
@@ -56,8 +63,8 @@ def compressed_psum(tree, mesh, axis: str = "pod", error_state=None,
 
     def one(x, err):
         def body(x_l, e_l):
-            qs, new_err = error_feedback_step(x_l, e_l, qz)
-            tot = jax.lax.psum(qz.dequant(qs), axis)
+            _, rec, new_err = fused_error_feedback_step(x_l, e_l, qz)
+            tot = jax.lax.psum(rec, axis)
             return tot / n, new_err
 
         spec = P(*([None] * x.ndim))

@@ -23,3 +23,61 @@ def ddim_coeffs(ab_t, ab_s):
     c1 = np.sqrt(ab_s / ab_t)
     c2 = np.sqrt(1 - ab_s) - np.sqrt(ab_s) * np.sqrt(1 - ab_t) / np.sqrt(ab_t)
     return float(c1), float(c2)
+
+
+# ---------------------------------------------------------------------------
+# oracles for the fused int8 boundary kernels — bit-parity-locked against
+# repro.quantization.latent_roundtrip's halves (quant_rowwise / dequant) and
+# the two-term step update of repro.core.samplers.step_update
+# ---------------------------------------------------------------------------
+
+
+def _combine(eps_c, eps_u, guidance):
+    """cfg_combine with the nets already evaluated (same skip semantics:
+    guidance == 1.0 returns ε_c untouched)."""
+    if guidance == 1.0:
+        return eps_c
+    return eps_u + guidance * (eps_c - eps_u)
+
+
+def _two_term_update(x, eps, coeffs, mode):
+    """The two-term step tail on (1, 2) coeffs — ddim_update / rf_update
+    with (ᾱ_t, ᾱ_s) resp. (Δt, ·) unpacked from the kernel operand."""
+    c0 = coeffs[0, 0]
+    c1 = coeffs[0, 1]
+    if mode == "ddim":
+        x0_hat = (x - jnp.sqrt(1 - c0) * eps) / jnp.sqrt(c0)
+        return jnp.sqrt(c1) * x0_hat + jnp.sqrt(1 - c1) * eps
+    return x + c0 * eps
+
+
+def fused_cfg_step_quant_ref(x, eps_c, eps_u, coeffs, *, guidance, mode):
+    """Oracle for the emit kernel: two-term step update followed by
+    ``repro.quantization.quant_rowwise`` on the wire rows.  Returns
+    ``(q, s)``; the payload must equal ``latent_roundtrip``'s quantize half
+    on the stepped latent to the bit."""
+    from repro.quantization import quant_rowwise
+
+    out = _two_term_update(
+        x.astype(jnp.float32),
+        _combine(eps_c.astype(jnp.float32), eps_u.astype(jnp.float32),
+                 guidance),
+        coeffs, mode,
+    )
+    qs = quant_rowwise(out)
+    return qs["q"], qs["s"]
+
+
+def fused_cfg_step_dequant_ref(q, s, eps_c, eps_u, coeffs, *, guidance, mode):
+    """Oracle for the consume kernel: ``dequant_rowwise`` of the wire
+    payload feeding the two-term step update; output dtype follows ε_c."""
+    from repro.quantization import dequant_rowwise
+
+    x = dequant_rowwise({"q": q, "s": s})
+    out = _two_term_update(
+        x,
+        _combine(eps_c.astype(jnp.float32), eps_u.astype(jnp.float32),
+                 guidance),
+        coeffs, mode,
+    )
+    return out.astype(eps_c.dtype)

@@ -1,7 +1,12 @@
 """Pallas TPU row-wise int8 quant/dequant kernels — the HBM-bound inner op
 of quantized optimizer states and compressed gradient sync.  One pass:
 read a row block, reduce |max| per row on the VPU, scale/round/clip, write
-int8 + one fp32 scale per row."""
+int8 + one fp32 scale per row.
+
+Row counts that don't divide the block are zero-padded up to the grid and
+sliced back — all-zero (and padded) rows hit the ``amax > 0`` guard, so
+their scale is 1.0 and their payload exact zeros: no div-by-zero, no NaN,
+and reconstruction of a zero row is exactly zero."""
 from __future__ import annotations
 
 import jax
@@ -12,6 +17,8 @@ from jax.experimental import pallas as pl
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    # amax == 0 (all-zero or padded rows) → scale 1.0, q ≡ 0: the guard
+    # that keeps padding and degenerate rows NaN-free end to end
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(x / scale), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
@@ -22,12 +29,18 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
     o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
 
 
+def _pad_rows(a: jnp.ndarray, pad: int) -> jnp.ndarray:
+    return jnp.pad(a, ((0, pad), (0, 0))) if pad else a
+
+
 def quant_int8_fwd(x: jnp.ndarray, *, block_r: int = 256, interpret: bool = False):
     r, c = x.shape
     block_r = min(block_r, r)
-    assert r % block_r == 0
-    grid = (r // block_r,)
-    return pl.pallas_call(
+    pad = (-r) % block_r
+    x = _pad_rows(x, pad)
+    rp = r + pad
+    grid = (rp // block_r,)
+    q, s = pl.pallas_call(
         _quant_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block_r, c), lambda i: (i, 0))],
@@ -36,25 +49,30 @@ def quant_int8_fwd(x: jnp.ndarray, *, block_r: int = 256, interpret: bool = Fals
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, c), jnp.int8),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rp, c), jnp.int8),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    return q[:r], s[:r]
 
 
 def dequant_int8_fwd(q, scale, *, block_r: int = 256, interpret: bool = False):
     r, c = q.shape
     block_r = min(block_r, r)
-    assert r % block_r == 0
-    return pl.pallas_call(
+    pad = (-r) % block_r
+    q = _pad_rows(q, pad)
+    scale = _pad_rows(scale, pad)
+    rp = r + pad
+    out = pl.pallas_call(
         _dequant_kernel,
-        grid=(r // block_r,),
+        grid=(rp // block_r,),
         in_specs=[
             pl.BlockSpec((block_r, c), lambda i: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
         interpret=interpret,
     )(q, scale)
+    return out[:r]

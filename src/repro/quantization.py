@@ -2,9 +2,13 @@
 
 One module owns every int8 round-trip in the repo:
 
-* **relay handoff wire format** (`latent_roundtrip`) — the edge→device latent
-  serialization used by `repro.core.relay.relay_generate(compress_handoff=)`
-  and the serving runtime's `HandoffTransport`;
+* **relay handoff wire format** (`latent_roundtrip`, split into the
+  `quant_latent` / `dequant_latent` halves over the `latent_to_rows` row
+  layout) — the edge→device latent serialization used by
+  `repro.core.relay.relay_generate(compress_handoff=)`, the serving
+  runtime's `HandoffTransport`, and the fused segment boundaries
+  (`repro.core.boundary` emits/consumes the halves directly from the
+  sampler step, so the wire payload is the boundary's only currency);
 * **compressed collectives** (`error_feedback_step`, consumed by
   `repro.distributed.compression.compressed_psum`) — DiLoCo-style periodic
   sync with error feedback;
@@ -136,6 +140,23 @@ def quant_error(x: Array, quantizer="rowwise") -> Array:
 # ---------------------------------------------------------------------------
 
 
+def fused_error_feedback_step(x: Array, err: Array, quantizer="rowwise"):
+    """One error-feedback quantization step that also hands back the
+    dequantized payload: ``(qs, rec, new_err)`` with the int8 round-trip
+    computed exactly once — ``rec`` is both the collective's psum payload
+    and the value the residual is measured against, so callers that need
+    the reconstruction (``compressed_psum`` sums it across shards) don't
+    dequantize a second time.  This is the fused quantized-collective
+    primitive the relay's fused segment boundaries
+    (:mod:`repro.core.boundary`) and distributed training share.
+    """
+    qz = get_quantizer(quantizer)
+    v = x.astype(jnp.float32) + err
+    qs = qz.quant(v)
+    rec = qz.dequant(qs)
+    return qs, rec, v - rec
+
+
 def error_feedback_step(x: Array, err: Array, quantizer="rowwise"):
     """One error-feedback quantization step: quantize (value + carried
     residual), return the payload and the new residual.
@@ -144,12 +165,12 @@ def error_feedback_step(x: Array, err: Array, quantizer="rowwise"):
     any future quantized-transport retry path share: feeding the residual
     forward makes the *accumulated* reduction exact even though each
     individual sync is lossy (Deep-Gradient-Compression / 1-bit-Adam-style
-    error accumulation).  Returns ``(qs, new_err)``.
+    error accumulation).  Returns ``(qs, new_err)`` — a thin view of
+    :func:`fused_error_feedback_step` for callers that don't consume the
+    reconstruction.
     """
-    qz = get_quantizer(quantizer)
-    v = x.astype(jnp.float32) + err
-    qs = qz.quant(v)
-    return qs, v - qz.dequant(qs)
+    qs, _, new_err = fused_error_feedback_step(x, err, quantizer)
+    return qs, new_err
 
 
 def relative_deviation(x: Array, rec: Array) -> Array:
@@ -174,24 +195,82 @@ def payload_bytes(qs: dict) -> int:
 # ---------------------------------------------------------------------------
 
 
+def latent_to_rows(x: Array) -> Array:
+    """(..., H, W, C) latent → (..., C, H·W) wire rows — the quantization
+    row layout of the relay handoff: each row is one sample's spatial slice
+    of one channel.  A pure layout move (bit-exact both ways); rows never
+    cross leading (batch) dims, so a sample's payload is independent of its
+    batch companions."""
+    xm = jnp.moveaxis(x, -1, -3)  # (..., C, H, W)
+    return xm.reshape(xm.shape[:-2] + (-1,))  # (..., C, H·W)
+
+
+def rows_to_latent(rows: Array, latent_shape, dtype=jnp.float32) -> Array:
+    """Inverse of :func:`latent_to_rows`: (..., C, H·W) wire rows back to a
+    (..., H, W, C) latent of trailing shape ``latent_shape`` = (H, W, C)."""
+    h, w, c = latent_shape
+    xm = rows.reshape(rows.shape[:-2] + (c, h, w))
+    return jnp.moveaxis(xm, -3, -1).astype(dtype)
+
+
+def quant_latent(x: Array, quantizer="rowwise"):
+    """Quantize a (..., H, W, C) latent into the wire currency: the
+    ``{"q", "s"}`` payload over :func:`latent_to_rows` — exactly the
+    serialization half of :func:`latent_roundtrip`, exposed so fused
+    segment boundaries (:mod:`repro.core.boundary`) can emit the wire
+    format without a separate round-trip dispatch.
+
+    Returns ``(qs, payload_bytes)``; the byte count is a static Python
+    int (jit-safe).
+
+    The rowwise path quantizes in the latent's native (..., H, W, C)
+    layout — per-channel amax over the spatial axes — and transposes only
+    the int8 payload into row layout.  Bit-identical to quantizing the
+    transposed rows (max is exact under reordering and the scale/round
+    expressions are unchanged) but the fp32 traffic stays contiguous and
+    only a quarter of the bytes cross the layout move; on CPU XLA this is
+    what keeps a fused step→quantize emit from fusing the two-input step
+    elementwise into a strided transpose (~3× the tail time at 128×128,
+    see ``benchmarks/bench_handoff.py``)."""
+    if quantizer == "rowwise":
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=(-3, -2), keepdims=True)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        qs = {
+            "q": latent_to_rows(q),
+            "s": jnp.moveaxis(scale, -1, -3).reshape(
+                scale.shape[:-3] + (x.shape[-1], 1)
+            ),
+        }
+        return qs, payload_bytes(qs)
+    qs = get_quantizer(quantizer).quant(latent_to_rows(x))
+    return qs, payload_bytes(qs)
+
+
+def dequant_latent(qs: dict, latent_shape, dtype=jnp.float32,
+                   quantizer="rowwise") -> Array:
+    """Reconstruct a (..., H, W, C) latent from the wire currency — the
+    deserialization half of :func:`latent_roundtrip`.  ``latent_shape`` is
+    the trailing (H, W, C) (the leading dims come from the payload)."""
+    return rows_to_latent(
+        get_quantizer(quantizer).dequant(qs), latent_shape, dtype
+    )
+
+
 def latent_roundtrip(x: Array, quantizer="rowwise"):
     """Channel-rows int8 round-trip of a (..., H, W, C) latent — the relay
     handoff's wire format: each quantization row is one sample's spatial
     slice of one channel, one fp32 scale each (C scales per latent,
-    matching ``repro.serving.latency.latent_wire_bytes``).  Rows never
-    cross leading (batch) dims, so a sample's reconstruction is independent
-    of its batch companions.
+    matching ``repro.serving.latency.latent_wire_bytes``).  Composed from
+    :func:`quant_latent` + :func:`dequant_latent`, the same halves the
+    fused segment boundaries use — one code path, bit-identical either way.
 
     Returns (reconstructed latent in x's dtype, payload bytes on the wire).
     jit-safe: the payload is a static Python int."""
-    qz = get_quantizer(quantizer)
-    xm = jnp.moveaxis(x, -1, -3)  # (..., C, H, W)
-    rows = xm.reshape(xm.shape[:-2] + (-1,))  # (..., C, H·W)
-    qs = qz.quant(rows)
-    rec = jnp.moveaxis(
-        qz.dequant(qs).reshape(xm.shape), -3, -1
-    ).astype(x.dtype)
-    return rec, payload_bytes(qs)
+    qs, nbytes = quant_latent(x, quantizer)
+    rec = dequant_latent(qs, x.shape[-3:], x.dtype, quantizer)
+    return rec, nbytes
 
 
 def latent_roundtrip_int8(x: Array):

@@ -10,7 +10,15 @@ pipeline regardless of its relay step.  The legacy 11-arm space compiles 3
 pipelines instead of 11 (hit rates in :meth:`Executor.cache_stats`).
 Latent buffers are donated at segment boundaries on backends that support
 donation (the handoff consumes the upstream latent), and the hot path
-never materializes trajectory stacks (``capture_traj=False``)."""
+never materializes trajectory stacks (``capture_traj=False``).
+
+**Fused boundaries** (default on): compressed handoffs flow as the int8+
+scales wire payload *between* segment fns — the emitting segment's last
+step writes ``(q, s)`` directly (:mod:`repro.core.boundary`) and the
+consuming segment's first step reads it, so no standalone quant/dequant
+dispatch (or fp16 boundary latent) sits between segments.  The pipeline
+cache key gains the per-hop boundary format, and donation covers the int8
+payload leaves exactly as it covered the fp16 latent."""
 from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
@@ -19,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import samplers
+from repro.core import boundary, samplers
 from repro.core.program import (MERGE_NODE, SEGMENT_NODE, SELECT_NODE,
                                 RelayGraph, RelayProgram, compile_plan,
                                 select_bound_pct)
@@ -48,11 +56,17 @@ class Executor:
     (``generate_bucketed(..., subset=...)``) relies on."""
 
     def __init__(self, families: Dict[str, Family],
-                 arms: Optional[Sequence[Arm]] = None):
+                 arms: Optional[Sequence[Arm]] = None,
+                 fused_boundary: bool = True):
         self.families = families
         self.arms = tuple(arms) if arms is not None else ARMS
+        # fused int8 boundaries: compressed hops ride inside the segment
+        # fns as the wire payload (exact payload/bytes, latents equivalent
+        # per the repro.core.boundary parity contract, locked by
+        # tests/test_fused_boundary.py)
+        self.fused_boundary = bool(fused_boundary)
         self._pipelines = {}  # shape key -> composed program runner
-        self._seg_fns = {}  # (family, role, guidance) -> jitted segment fn
+        self._seg_fns = {}  # (family, role, guidance, in_q, out_q, flavor)
         self._noise_fns = {}  # (latent_shape, per_key) -> jitted noise fn
         self._hop_fns = {}  # quantizer -> jitted latent roundtrip
         self._requests = 0  # pipeline lookups (cache-hit-rate telemetry)
@@ -83,25 +97,68 @@ class Executor:
             self._noise_fns[key] = jax.jit(fn)
         return self._noise_fns[key]
 
-    def _segment_fn(self, family: str, role: str, guidance: float):
-        """One jitted sampler per (family, role, guidance): the ladder slice
-        bounds are traced int32 inputs, so every relay step of a family
-        reuses this single compiled segment."""
-        key = (family, role, guidance)
+    def _segment_fn(self, family: str, role: str, guidance: float,
+                    in_q: Optional[str] = None, out_q: Optional[str] = None,
+                    out_flavor: str = "wire", donate: bool = True):
+        """One jitted sampler per (family, role, guidance, boundary format):
+        the ladder slice bounds are traced int32 inputs, so every relay
+        step of a family reuses this single compiled segment.
+
+        ``in_q`` / ``out_q`` name the wire quantizer of a fused boundary on
+        the segment's input / output side (None = plain latent).  With
+        ``in_q`` the latent argument is the ``(q, s)`` payload — donated
+        exactly like the fp16 latent was, the int8 buffers are consumed by
+        the boundary step — and the segment's first step reads it.  With
+        ``out_q`` the segment's last step emits the payload; ``out_flavor``
+        picks what rides along (``repro.core.boundary.EMIT_FLAVORS``):
+        "wire" returns ``(q, s)``, "wire_dev" appends the Eq. 1 deviation,
+        "wire_dev_latent" also the stepped latent (DAG nodes with mixed
+        consumers).  ``donate=False`` keeps the input buffers alive — the
+        DAG pipelines use it when a wire payload (or latent) fans out to
+        more than one consumer, where donating would free buffers a later
+        branch still reads."""
+        key = (family, role, guidance, in_q, out_q,
+               out_flavor if out_q else None, donate)
         if key not in self._seg_fns:
             fam = self.families[family]
             net = role_fn(fam, role)
+            kind = fam.spec.kind
+            latent_shape = tuple(fam.spec.latent_shape)
             sigmas = fam.spec.ladder(role)
-            sample = samplers.sampler_for(fam.spec.kind)
+            sample = samplers.sampler_for(kind)
 
             def fn(params, x, cond, start, stop):
+                if in_q:
+                    q, s = x
+                    x = boundary.dequant_step(
+                        kind, net, params, {"q": q, "s": s}, latent_shape,
+                        sigmas, start, cond, None, guidance, quantizer=in_q,
+                    )
+                    start = start + 1
+                if out_q:
+                    x, _ = sample(
+                        net, params, x, sigmas, cond, start=start,
+                        stop=stop - 1, guidance=guidance, capture_traj=False,
+                    )
+                    res = boundary.quant_step(
+                        kind, net, params, x, sigmas, stop - 1, cond, None,
+                        guidance, quantizer=out_q, flavor=out_flavor,
+                    )
+                    w = (res["wire"]["q"], res["wire"]["s"])
+                    if out_flavor == "wire":
+                        return w
+                    if out_flavor == "wire_dev":
+                        return w, res["dev_pct"]
+                    return w, res["dev_pct"], res["latent"]
                 out, _ = sample(
                     net, params, x, sigmas, cond, start=start, stop=stop,
                     guidance=guidance, capture_traj=False,
                 )
                 return out
 
-            self._seg_fns[key] = jax.jit(fn, donate_argnums=_donate_argnums())
+            self._seg_fns[key] = jax.jit(
+                fn, donate_argnums=_donate_argnums() if donate else ()
+            )
         return self._seg_fns[key]
 
     def _hop_fn(self, quantizer: str):
@@ -156,7 +213,29 @@ class Executor:
                 return self._graph_pipeline(program, plan, latent_shape,
                                             per_key)
         self._requests += 1
-        shape = (program.shape_key(), tuple(latent_shape), per_key)
+        fused = self.fused_boundary
+        # boundary-format key: per hop, whether the wire payload flows
+        # fused through the segment fns or through a standalone roundtrip
+        bfmt = tuple(
+            ("fused" if fused else "xla", h.quantizer) if h.compress
+            else ("raw", None)
+            for h in program.handoffs
+        )
+        if fused:
+            # validate before the cache lookup: segment bounds are traced,
+            # so programs sharing a shape share one pipeline — every
+            # concrete program must be checked, not just the first one
+            for k, seg in enumerate(program.segments):
+                fin = k > 0 and program.handoffs[k - 1].compress
+                fout = (k < len(program.handoffs)
+                        and program.handoffs[k].compress)
+                if fin and fout and seg.steps < 2:
+                    raise ValueError(
+                        f"segment {k} of the {program.family} program has "
+                        "too few steps to both consume and emit a fused "
+                        "boundary (needs >= 2)"
+                    )
+        shape = (program.shape_key(), tuple(latent_shape), per_key, bfmt)
         if shape in self._pipelines:
             return self._pipelines[shape]
         fam = self.families[program.family]
@@ -167,13 +246,20 @@ class Executor:
                 f"load families with with_mid=True to run cascade programs"
             )
         noise = self._noise_fn(latent_shape, per_key)
+
+        def _hop_q(k):  # wire quantizer of hop k when fused, else None
+            hs = program.handoffs
+            return (hs[k].quantizer
+                    if fused and 0 <= k < len(hs) and hs[k].compress else None)
+
         seg_fns = [
-            self._segment_fn(program.family, seg.model, seg.guidance)
-            for seg in program.segments
+            self._segment_fn(program.family, seg.model, seg.guidance,
+                             in_q=_hop_q(k - 1), out_q=_hop_q(k))
+            for k, seg in enumerate(program.segments)
         ]
         roles = [seg.model for seg in program.segments]
         hop_fns = [
-            self._hop_fn(h.quantizer) if h.compress else None
+            self._hop_fn(h.quantizer) if h.compress and not fused else None
             for h in program.handoffs
         ]
 
@@ -200,7 +286,48 @@ class Executor:
         the candidate branch's Eq. 1 deviation against the reference latent
         decides which handoff survives."""
         self._requests += 1
-        shape = (graph.shape_key(), tuple(latent_shape), per_key)
+        fused = self.fused_boundary
+
+        # fused-boundary plan analysis (static — the plan is concrete):
+        # which segment nodes emit the wire payload from their last step,
+        # and which edges consume it at their dst's first step.  Runs
+        # *before* the pipeline-cache lookup so the too-few-steps
+        # validation covers every concrete plan sharing a shape, not just
+        # the first one that compiled it.
+        kind_of = {n.nid: n.kind for n in plan.nodes}
+        fused_edges: set = set()
+        emit_cfg: Dict[str, tuple] = {}  # nid -> (quantizer, flavor)
+        if fused:
+            succs = {n.nid: [] for n in plan.nodes}
+            for e in plan.edge_order:
+                succs[e.src].append(e)
+            for n in plan.nodes:
+                if n.kind != SEGMENT_NODE:
+                    continue
+                wire_succ = [
+                    e for e in succs[n.nid]
+                    if e.handoff is not None and e.handoff.compress
+                    and kind_of[e.dst] == SEGMENT_NODE
+                ]
+                if not wire_succ:
+                    continue
+                q0 = wire_succ[0].handoff.quantizer
+                matched = [e for e in wire_succ
+                           if e.handoff.quantizer == q0]
+                fused_edges.update(matched)
+                need_latent = (n.nid == plan.sink
+                               or len(matched) < len(succs[n.nid]))
+                emit_cfg[n.nid] = (
+                    q0, "wire_dev_latent" if need_latent else "wire_dev"
+                )
+                consumed = any(e in fused_edges for e in plan.preds[n.nid])
+                if n.segment.steps < (2 if consumed else 1):
+                    raise ValueError(
+                        f"graph node {n.nid} has too few steps to both "
+                        "consume and emit a fused boundary"
+                    )
+
+        shape = (graph.shape_key(), tuple(latent_shape), per_key, fused)
         if shape in self._pipelines:
             return self._pipelines[shape]
         fam = self.families[graph.family]
@@ -211,9 +338,30 @@ class Executor:
                 f"load families with with_mid=True to run cascade programs"
             )
         noise = self._noise_fn(latent_shape, per_key)
+
+        n_succ = {n.nid: 0 for n in plan.nodes}
+        for e in plan.edge_order:
+            n_succ[e.src] += 1
+        n_sources = sum(1 for n in plan.nodes if not plan.preds[n.nid])
+
+        def _donate_ok(n):  # safe to donate this node's input buffers?
+            pe = plan.preds[n.nid]
+            if not pe:  # x0 is shared by every source node
+                return n_sources == 1
+            # the upstream output (latent or wire payload) must have no
+            # other consumer — donation frees it for everyone
+            return n_succ[pe[0].src] == 1
+
         seg_fns = {
-            n.nid: self._segment_fn(graph.family, n.segment.model,
-                                    n.segment.guidance)
+            n.nid: self._segment_fn(
+                graph.family, n.segment.model, n.segment.guidance,
+                in_q=(plan.preds[n.nid][0].handoff.quantizer
+                      if plan.preds[n.nid]
+                      and plan.preds[n.nid][0] in fused_edges else None),
+                out_q=emit_cfg.get(n.nid, (None,))[0],
+                out_flavor=emit_cfg.get(n.nid, (None, "wire"))[1],
+                donate=_donate_ok(n),
+            )
             for n in plan.nodes if n.kind == SEGMENT_NODE
         }
         from repro.quantization import relative_deviation
@@ -221,13 +369,19 @@ class Executor:
         dev_fn = jax.jit(lambda a, b: relative_deviation(a, b) * 100.0)
 
         def run(key, cond, bounds):
-            out, path_dev = {}, {}
+            out, wire, path_dev = {}, {}, {}
             x0 = noise(key, cond)
             for i, node in enumerate(plan.nodes):
                 pe = plan.preds[node.nid]
                 if node.kind == SEGMENT_NODE:
                     if not pe:
                         x_in, d_in = x0, 0.0
+                    elif pe[0] in fused_edges:
+                        # fused consume: the segment fn's first step reads
+                        # the shared wire payload emitted by the src node
+                        e = pe[0]
+                        x_in, dev = wire[e.src]
+                        d_in = max(path_dev[e.src], float(dev))
                     else:
                         e = pe[0]
                         x_in, d_in = out[e.src], path_dev[e.src]
@@ -235,10 +389,18 @@ class Executor:
                             x_in, dev = self._hop_dev_fn(e.handoff.quantizer)(
                                 x_in)
                             d_in = max(d_in, float(dev))
-                    out[node.nid] = seg_fns[node.nid](
+                    res = seg_fns[node.nid](
                         role_params(fam, node.segment.model), x_in, cond,
                         *bounds[i]
                     )
+                    cfg = emit_cfg.get(node.nid)
+                    if cfg is None:
+                        out[node.nid] = res
+                    else:
+                        w, dev = res[0], res[1]
+                        wire[node.nid] = ((w[0], w[1]), dev)
+                        if cfg[1] == "wire_dev_latent":
+                            out[node.nid] = res[2]
                     path_dev[node.nid] = d_in
                 elif node.kind == MERGE_NODE:
                     xs = [out[e.src] for e in pe]
@@ -259,14 +421,52 @@ class Executor:
         self._pipelines[shape] = run
         return run
 
+    def warm(self, buckets=(1,)) -> Dict[str, float]:
+        """JIT pre-fire: run every arm once at the smallest bucket so the
+        pipelines, segment fns and fused boundary tails all compile before
+        the first real request (the serving runtime calls this off the hot
+        path).  Returns :meth:`cache_stats` afterwards — the warm-path
+        tests assert the boundary telemetry is populated here and
+        *unchanged* after the first real request."""
+        for arm in self.arms:
+            self.generate_bucketed(arm, np.asarray([0]),
+                                   buckets=tuple(buckets))
+            if self.fused_boundary:
+                # The pipeline run above traces the boundary tails *inline*
+                # (inside the outer-jitted segment fns), which leaves the
+                # standalone tail caches cold; fire them directly so eager
+                # callers (execute_program, transports, benchmarks) find
+                # them compiled too — and so the telemetry below is
+                # observable at all.
+                prog = arm.program
+                fam = prog.family
+                if fam is not None:
+                    spec = self.families[fam].spec
+                    if isinstance(prog, RelayGraph):
+                        hoffs = [e.handoff for e in prog.edges
+                                 if e.handoff is not None]
+                    else:
+                        hoffs = prog.handoffs
+                    for qz in sorted({h.quantizer for h in hoffs
+                                      if h.compress}):
+                        boundary.warm(spec.latent_shape, quantizer=qz)
+        return self.cache_stats()
+
     def cache_stats(self) -> Dict[str, float]:
         """Shape-cache telemetry: how many distinct compiled pipelines back
-        the requested arm programs (the dedup the shape key buys)."""
+        the requested arm programs (the dedup the shape key buys), plus the
+        fused-boundary tail caches (``repro.core.boundary``) the segment
+        fns compile through."""
+        bstats = boundary.cache_stats()
         return {
             "pipeline_requests": self._requests,
             "pipelines_compiled": len(self._pipelines),
             "segment_fns_compiled": len(self._seg_fns),
             "noise_fns_compiled": len(self._noise_fns),
+            "boundary_fns_cached": len(bstats),
+            "boundary_traces_compiled": sum(
+                v for v in bstats.values() if v > 0
+            ),
             "cache_hit_rate": (
                 1.0 - len(self._pipelines) / self._requests
                 if self._requests else 0.0

@@ -115,6 +115,41 @@ def transfer_time(family: Optional[str], rtt_ms: float, bw_mbps: float = 20.0,
     return rtt_ms / 1000.0 + wire_seconds(family, bw_mbps, compressed)
 
 
+# HBM roofline for the *unfused* boundary's extra memory traffic: the
+# standalone quantize dispatch reads the fp16 latent and writes the int8
+# payload, the standalone dequantize reads the payload and writes the
+# latent back.  A fused boundary elides all four (the payload is produced
+# by the last sampler step's write and consumed by the first step's read),
+# so its handoff costs the wire+RTT alone.
+HBM_GBPS = 100.0
+
+
+def boundary_compute_seconds(family: Optional[str], compressed: bool = True,
+                             fused: bool = False) -> float:
+    """Roofline seconds of the quant/dequant dispatches bracketing one
+    compressed handoff: ``(2·latent + 2·payload) / HBM bandwidth``.  Zero
+    when the boundary is fused into the sampler steps (nothing extra moves
+    through HBM) or when the hop ships the raw fp16 latent (nothing to
+    quantize)."""
+    if family is None or fused or not compressed:
+        return 0.0
+    traffic = 2 * LATENT_BYTES[family] + 2 * latent_wire_bytes(family, True)
+    return traffic / (HBM_GBPS * 1e9)
+
+
+def handoff_seconds(family: Optional[str], rtt_ms: float,
+                    bw_mbps: float = 20.0, compressed: bool = False,
+                    fused: bool = True) -> float:
+    """Full cost of one segment boundary: the wire+RTT transfer
+    (:func:`transfer_time`) plus, for an *unfused* compressed hop, the
+    quant/dequant roofline term (:func:`boundary_compute_seconds`).  The
+    fused default prices the boundary at wire time alone — the invariant
+    ``benchmarks/bench_handoff.py`` gates (fused ≤ 1.1× wire)."""
+    return (transfer_time(family, rtt_ms, bw_mbps=bw_mbps,
+                          compressed=compressed)
+            + boundary_compute_seconds(family, compressed, fused))
+
+
 def _jitter(rng: Optional[np.random.Generator]) -> float:
     if rng is None:
         return 1.0

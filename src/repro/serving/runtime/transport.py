@@ -86,17 +86,33 @@ class HandoffTransport:
             compressed=self.cfg.compress,
         )
 
-    def warm(self, families) -> None:
+    def warm(self, families, boundary: bool = False) -> None:
         """Pre-measure the round-trip error for the given families.
 
         ``handoff_error`` lazily traces + compiles the quantizer round-trip
         through JAX on first use (~1 s); left lazy, that JIT fires inside
         the first BATCH_DONE handler and lands in the event-loop profile
         as simulated-scheduler cost it is not.  Engines call this once
-        before their loop starts."""
+        before their loop starts.
+
+        With ``boundary=True`` the fused int8 segment-boundary tails
+        (:mod:`repro.core.boundary`) pre-compile too, at each family's
+        representative handoff latent shape — opt-in because the simulated
+        engines never execute latents and shouldn't pay those compiles;
+        runtimes that drive a real :class:`~repro.serving.executor.Executor`
+        turn it on so the first compressed relay request doesn't eat the
+        boundary JIT.  ``repro.core.boundary.cache_stats`` exposes what got
+        compiled for the telemetry asserts."""
         for fam in families:
             if fam is not None:
                 self.handoff_error(fam)
+        if boundary and self.cfg.compress:
+            from repro.core import boundary as bnd
+
+            for fam in families:
+                if fam is not None:
+                    c = lat.LATENT_CHANNELS[fam]
+                    bnd.warm((16, 16, c), quantizer=self.cfg.quantizer)
 
     def handoff_error(self, family: str) -> float:
         """Measured relative error of the int8 round-trip for this family's

@@ -1,0 +1,61 @@
+"""End-to-end CI gate for the fused-boundary benchmark:
+``bench_handoff --quick`` runs as a subprocess (the same entry point a
+developer invokes) and its three gates hold — exact wire-payload parity,
+fused tail ≤ 1.1× the unfused step|quant|dequant|step sequence, and the
+latency-model roofline (fused boundary priced at wire time alone).
+
+@slow: the fast gate skips this; scripts/ci.sh runs it as its own
+full-gate stage (JUnit artifact handoff.xml) next to the DAG bench gate.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+
+pytestmark = pytest.mark.slow
+
+
+def _run(args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, *args], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=ROOT,
+    )
+    assert r.returncode == 0, (
+        f"{' '.join(map(str, args))}\nSTDOUT:\n{r.stdout[-2000:]}\n"
+        f"STDERR:\n{r.stderr[-3000:]}"
+    )
+    return r.stdout
+
+
+def test_bench_handoff_quick_gate():
+    """The benchmark's own asserts are the gate (it exits non-zero on a
+    parity break or a fused-tail regression); on top, the emitted JSON
+    must show every timed shape at-or-under the regression bound and the
+    roofline ratio at 1.0 — the fused boundary is priced at wire time
+    alone in the latency model."""
+    out = _run([ROOT / "benchmarks" / "bench_handoff.py", "--quick"])
+    assert "handoff_summary" in out
+    data = json.loads((RESULTS / "bench_handoff_quick.json").read_text())
+    assert data["tails"], "no shapes timed"
+    for row in data["tails"]:
+        assert row["fused_ms"] <= 1.1 * row["unfused_ms"], row["label"]
+        assert row["payload_bytes"] > 0
+    for row in data["roofline"]:
+        assert row["fused_over_wire"] <= 1.1, row["family"]
+        assert row["unfused_s"] > row["fused_s"], row["family"]
+    committed = RESULTS / "bench_handoff.json"
+    if committed.exists():  # the shipped full-run baseline, when present
+        full = json.loads(committed.read_text())
+        for row in full["tails"]:
+            assert row["fused_ms"] <= 1.1 * row["unfused_ms"], (
+                f"committed baseline off the gate: {row['label']}"
+            )

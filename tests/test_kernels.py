@@ -1,15 +1,35 @@
 """Pallas kernel validation (interpret mode) vs pure-jnp oracles, sweeping
-shapes and dtypes."""
+shapes and dtypes.  The hypothesis-based property tests skip individually
+when hypothesis is absent (requirements-dev.txt); the parametrized sweeps
+and regression tests always run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-dev.txt)",
-)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip, everything else still runs
+    HAVE_HYPOTHESIS = False
+
+    def given(**kwargs):  # placeholder decorator: the test body never runs
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="property tests need hypothesis "
+                "(see requirements-dev.txt)"
+            )(fn)
+        return deco
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -20,7 +40,10 @@ from repro.kernels.quant.ref import quant_int8_ref
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
 
-TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+# bf16 ulp is ~2^-8 of the magnitude; latents here reach |x| ≈ 4–5, so a
+# single-rounding divergence between the f32-accumulating kernel and the
+# native-bf16 oracle can hit ~0.03 on one element
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 4e-2}
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -115,6 +138,36 @@ def test_quant_int8_roundtrip_property(r, c, scale):
     bound = np.asarray(s)[..., 0] * 0.5 + 1e-7
     err = np.abs(np.asarray(deq) - np.asarray(x)).max(axis=-1)
     assert np.all(err <= bound + 1e-6)
+
+
+@pytest.mark.parametrize("r", [1, 3, 17, 33])  # none divisible by block_r=16
+def test_quant_int8_ragged_rows(r):
+    """Regression: row counts not divisible by the block size used to trip
+    an assert in the fwd fns; they now pad internally and slice back.  The
+    oracle is *jitted* — that's the production parity target (XLA rewrites
+    the /127 into a reciprocal multiply under jit; eager does a true IEEE
+    divide, 1 ulp apart on some rows)."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (r, 24)) * 3.0
+    q, s = quant_int8(x, interpret=True, block_r=16)
+    qr, sr = jax.jit(quant_int8_ref)(x)
+    assert q.shape == (r, 24) and s.shape == (r, 1)
+    assert bool((q == qr).all())
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_quant_int8_zero_rows():
+    """Regression: all-zero rows (amax 0) must quantize to zeros with the
+    guard scale 1.0 — no NaN/inf from a 0/0 — including padded rows."""
+    x = jnp.zeros((5, 12), jnp.float32)
+    x = x.at[2].set(jnp.linspace(-2.0, 2.0, 12))  # one live row
+    q, s = quant_int8(x, interpret=True, block_r=16)
+    assert not bool(jnp.isnan(s).any()) and not bool(jnp.isinf(s).any())
+    np.testing.assert_array_equal(np.asarray(s)[[0, 1, 3, 4], 0], 1.0)
+    deq = dequant_int8(q, s, interpret=True, block_r=16)
+    np.testing.assert_array_equal(np.asarray(deq)[[0, 1, 3, 4]], 0.0)
+    qr, sr = jax.jit(quant_int8_ref)(x)
+    assert bool((q == qr).all())
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
 
 
 def test_flash_attention_in_model_path():
